@@ -1,0 +1,101 @@
+"""Shared benchmark utilities: small-scale CNN training harness reproducing
+the paper's experimental loop (train -> compress -> optional retrain) on the
+synthetic MNIST/CIFAR stand-ins (CPU container; step counts reduced, see
+EXPERIMENTS.md for the full-scale mapping)."""
+from __future__ import annotations
+
+import time
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import masks as masks_lib
+from repro.core import metrics as metrics_lib
+from repro.core.optimizers import ProxOptimizer
+from repro.data.synthetic import (CIFAR_LIKE, MNIST_LIKE, ImageStreamConfig,
+                                  image_batch)
+from repro.models.cnn import CNN_ZOO, CNNModel
+from repro.train.losses import accuracy, softmax_xent
+
+
+def data_for(model: CNNModel, batch: int = 64,
+             noise: float = 1.0) -> ImageStreamConfig:
+    """noise=1.0 keeps the synthetic task non-trivial (reference accuracy
+    < 1.0) so the accuracy-vs-compression frontier is informative."""
+    import dataclasses
+    base = MNIST_LIKE if model.input_shape[-1] == 1 else CIFAR_LIKE
+    return dataclasses.replace(base, batch=batch, noise=noise)
+
+
+def make_cnn_step(model: CNNModel, opt: ProxOptimizer):
+    def loss_fn(params, batch):
+        logits = model.apply(params, batch["inputs"])
+        return softmax_xent(logits, batch["labels"])
+
+    @jax.jit
+    def step(params, opt_state, batch, mask=None):
+        loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        params, opt_state = opt.update(grads, opt_state, params, mask=mask)
+        return params, opt_state, loss
+
+    return step
+
+
+def evaluate_cnn(model: CNNModel, params, data_cfg, n_batches: int = 10,
+                 seed_offset: int = 10_000) -> float:
+    accs = []
+    apply = jax.jit(model.apply)
+    for i in range(n_batches):
+        b = image_batch(data_cfg, seed_offset + i)
+        accs.append(float(accuracy(apply(params, b["inputs"]), b["labels"])))
+    return float(np.mean(accs))
+
+
+def train_cnn(model: CNNModel, opt: ProxOptimizer, steps: int,
+              seed: int = 0, params=None, mask=None, batch: int = 64,
+              eval_every: Optional[int] = None):
+    """Returns (params, history[(step, loss, acc?, comp)])."""
+    data_cfg = data_for(model, batch)
+    if params is None:
+        params = model.init(jax.random.PRNGKey(seed))
+    opt_state = opt.init(params)
+    step_fn = make_cnn_step(model, opt)
+    history = []
+    for s in range(steps):
+        b = image_batch(data_cfg, s + seed * 100_000)
+        params, opt_state, loss = step_fn(params, opt_state, b, mask)
+        if eval_every and (s + 1) % eval_every == 0:
+            acc = evaluate_cnn(model, params, data_cfg, n_batches=5)
+            comp = metrics_lib.compression_rate(params)
+            history.append({"step": s + 1, "loss": float(loss),
+                            "acc": acc, "compression": comp})
+    return params, history
+
+
+def spc_with_retrain(model: CNNModel, lam: float, steps: int,
+                     retrain_steps: int, lr: float = 1e-3, seed: int = 0,
+                     optimizer: str = "prox_adam", batch: int = 64):
+    """Paper pipeline on a CNN: SpC -> (mask freeze) -> debias retrain."""
+    from repro.core.optimizers import get_optimizer
+    opt = get_optimizer(optimizer, learning_rate=lr, lam=lam)
+    params, _ = train_cnn(model, opt, steps, seed=seed, batch=batch)
+    out = {"spc_params": params,
+           "spc_compression": metrics_lib.compression_rate(params)}
+    if retrain_steps:
+        mask = masks_lib.zero_mask(params)
+        opt_db = get_optimizer(optimizer, learning_rate=lr, lam=0.0)
+        params2, _ = train_cnn(model, opt_db, retrain_steps, seed=seed,
+                               params=params, mask=mask, batch=batch)
+        out["retrain_params"] = params2
+        out["retrain_compression"] = metrics_lib.compression_rate(params2)
+    return out
+
+
+class Timer:
+    def __init__(self):
+        self.t0 = time.perf_counter()
+
+    def us(self, calls: int = 1) -> float:
+        return (time.perf_counter() - self.t0) * 1e6 / calls

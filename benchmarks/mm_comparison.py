@@ -1,0 +1,99 @@
+"""Paper Table 2 + Fig. 8: SpC vs the state-of-the-art MM (method of
+multipliers). Three paper claims validated:
+  1. comparable final (accuracy, compression),
+  2. SpC reaches top compression much FASTER (compression-vs-step curve),
+  3. MM needs ~2x optimizer memory and a pretrained model.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from benchmarks.common import (data_for, evaluate_cnn, make_cnn_step,
+                               train_cnn, Timer)
+from repro.core import metrics as metrics_lib
+from repro.core import mm
+from repro.core.optimizers import prox_adam
+from repro.data.synthetic import image_batch
+from repro.models.cnn import CNN_ZOO
+from repro.train.losses import softmax_xent
+
+STEPS = 300
+
+
+def run(steps: int = STEPS):
+    model = CNN_ZOO["lenet5"]
+    data_cfg = data_for(model)
+    rows = []
+
+    # --- SpC from random init -----------------------------------------------
+    t = Timer()
+    opt = prox_adam(1e-3, lam=1.0)
+    params = model.init(jax.random.PRNGKey(0))
+    opt_state = opt.init(params)
+    step = make_cnn_step(model, opt)
+    spc_curve = []
+    for s in range(steps):
+        b = image_batch(data_cfg, s)
+        params, opt_state, _ = step(params, opt_state, b)
+        if (s + 1) % (steps // 6) == 0:
+            spc_curve.append(round(metrics_lib.compression_rate(params), 3))
+    spc_us = t.us(steps)
+    acc_spc = evaluate_cnn(model, params, data_cfg)
+    comp_spc = metrics_lib.compression_rate(params)
+    st_prox = opt.init(params)
+    prox_bytes = sum(x.size * x.dtype.itemsize
+                     for x in jax.tree.leaves((st_prox.m, st_prox.v)))
+    rows.append({"name": "mm_comparison/spc",
+                 "us_per_call": spc_us,
+                 "derived": (f"acc={acc_spc:.4f},comp={comp_spc:.4f},"
+                             f"state_mb={prox_bytes/2**20:.2f},"
+                             f"curve={'|'.join(map(str, spc_curve))}")})
+
+    # --- MM from a pretrained model (as the paper allows it) ----------------
+    pre_params, _ = train_cnn(model, prox_adam(1e-3, lam=0.0), steps // 2)
+    # calibrated on the harder (noise=1.0) synthetic task; the paper's
+    # own observation holds: MM is *sensitive* to (mu0, growth) — alpha
+    # 0.02 at this mu ramp collapses accuracy to 0.63 (see EXPERIMENTS.md)
+    cfg = mm.MMConfig(alpha=1e-2, mu0=0.3, mu_growth=1.2,
+                      mu_every=30, c_step_every=30,
+                      learning_rate=2e-3, sgd_momentum=0.9)
+    state = mm.mm_init(pre_params, cfg)
+    mm_params = pre_params
+
+    def loss_fn(p, b):
+        return softmax_xent(model.apply(p, b["inputs"]), b["labels"])
+
+    @jax.jit
+    def mm_step(p, s, b):
+        g = jax.grad(loss_fn)(p, b)
+        return mm.mm_update(g, s, p, cfg)
+
+    t = Timer()
+    mm_curve = []
+    for s in range(steps):
+        b = image_batch(data_cfg, s)
+        mm_params, state = mm_step(mm_params, state, b)
+        if (s + 1) % (steps // 6) == 0:
+            final = mm.mm_final_params(mm_params, state)
+            mm_curve.append(round(metrics_lib.compression_rate(final), 3))
+    mm_us = t.us(steps)
+    final = mm.mm_final_params(mm_params, state)
+    acc_mm = evaluate_cnn(model, final, data_cfg)
+    comp_mm = metrics_lib.compression_rate(final)
+    mm_bytes = mm.mm_state_bytes(state)
+    rows.append({"name": "mm_comparison/mm",
+                 "us_per_call": mm_us,
+                 "derived": (f"acc={acc_mm:.4f},comp={comp_mm:.4f},"
+                             f"state_mb={mm_bytes/2**20:.2f},"
+                             f"pretrained=required,"
+                             f"curve={'|'.join(map(str, mm_curve))}")})
+    rows.append({"name": "mm_comparison/memory_ratio",
+                 "us_per_call": 0.0,
+                 "derived": f"mm_over_prox={mm_bytes/prox_bytes:.2f}x"})
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

@@ -1,0 +1,72 @@
+"""Paper experiment end-to-end: LeNet-5 on (synthetic) MNIST with the full
+method comparison — SpC vs SpC(Retrain) vs Pru vs Pru(Retrain) vs MM — i.e.
+one run reproducing the structure of the paper's Table 1 + Table 2 row.
+
+    PYTHONPATH=src python examples/paper_cnn_pipeline.py
+"""
+import jax
+
+from benchmarks.common import (data_for, evaluate_cnn, make_cnn_step,
+                               spc_with_retrain, train_cnn)
+from repro.core import masks, metrics, mm, pruning
+from repro.core.optimizers import prox_adam
+from repro.data.synthetic import image_batch
+from repro.models.cnn import CNN_ZOO
+from repro.train.losses import softmax_xent
+
+STEPS = 250
+
+
+def main():
+    model = CNN_ZOO["lenet5"]
+    data_cfg = data_for(model)
+    rows = []
+
+    # reference
+    ref, _ = train_cnn(model, prox_adam(1e-3, lam=0.0), STEPS)
+    ref_acc = evaluate_cnn(model, ref, data_cfg)
+    rows.append(("reference", ref_acc, 0.0))
+
+    # SpC / SpC(Retrain)
+    out = spc_with_retrain(model, lam=1.0, steps=STEPS, retrain_steps=100)
+    rows.append(("SpC", evaluate_cnn(model, out["spc_params"], data_cfg),
+                 out["spc_compression"]))
+    rows.append(("SpC(Retrain)",
+                 evaluate_cnn(model, out["retrain_params"], data_cfg),
+                 out["retrain_compression"]))
+
+    # Pru / Pru(Retrain) at matched compression
+    pruned = pruning.magnitude_prune_global(ref, out["spc_compression"])
+    rows.append(("Pru", evaluate_cnn(model, pruned, data_cfg),
+                 metrics.compression_rate(pruned)))
+    mask = masks.zero_mask(pruned)
+    pr_rt, _ = train_cnn(model, prox_adam(1e-3, lam=0.0), 100,
+                         params=pruned, mask=mask)
+    rows.append(("Pru(Retrain)", evaluate_cnn(model, pr_rt, data_cfg),
+                 metrics.compression_rate(pr_rt)))
+
+    # MM (needs the pretrained reference, as in the paper)
+    cfg = mm.MMConfig(alpha=1e-2, mu0=0.3, mu_growth=1.2, mu_every=30,
+                      c_step_every=30, learning_rate=2e-3)
+    state = mm.mm_init(ref, cfg)
+    p = ref
+
+    @jax.jit
+    def mm_step(p, s, b):
+        g = jax.grad(lambda q: softmax_xent(model.apply(q, b["inputs"]),
+                                            b["labels"]))(p)
+        return mm.mm_update(g, s, p, cfg)
+
+    for s in range(STEPS):
+        p, state = mm_step(p, state, image_batch(data_cfg, s))
+    final = mm.mm_final_params(p, state)
+    rows.append(("MM", evaluate_cnn(model, final, data_cfg),
+                 metrics.compression_rate(final)))
+
+    print(f"{'method':14s} {'accuracy':>9s} {'compression':>12s}")
+    for name, acc, comp in rows:
+        print(f"{name:14s} {acc:9.4f} {100*comp:11.1f}%")
+
+
+if __name__ == "__main__":
+    main()

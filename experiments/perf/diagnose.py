@@ -1,0 +1,31 @@
+"""Region-attributed cost breakdown of one dry-run cell."""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import sys, json
+from repro.launch.dryrun import lower_cell
+from repro.roofline.hlo_cost import module_cost, module_region_cost
+
+PATTERNS = {
+    "attn_interior": r"kv_step|one_q_chunk|chunked_attention",
+    "attn_proj": r"attn.*(einsum|dot_general)|decode_attention",
+    "moe": r"moe|top_k|cumsum|segment",
+    "wkv": r"chunked_wkv|wkv",
+    "rglru": r"rglru|associative_scan|causal_conv",
+    "optimizer": r"train_step/(add|mul|sub|sqrt|pow|min|max|div|integer_pow)$|prox",
+    "loss_head": r"log_softmax|logsumexp|take_along|softmax_xent|nll",
+    "embed": r"take\b|gather.*embed",
+    "transpose_copy": r"transpose|copy",
+}
+
+arch, shape, mesh = sys.argv[1], sys.argv[2], sys.argv[3] if len(sys.argv)>3 else "single"
+compiled, cfg, shp, meta = lower_cell(arch, shape, mesh == "multi")
+txt = compiled.as_text()
+total = module_cost(txt)
+regions = module_region_cost(txt, PATTERNS)
+print(f"== {arch} {shape} {mesh}  (per-device)")
+print(f"total: flops={total.flops:.3e} bytes={total.bytes:.3e} coll={total.total_collective_bytes:.3e}")
+print(f"{'region':16s} {'flops':>11s} {'bytes':>11s} {'coll_bytes':>11s}")
+for tag, c in sorted(regions.items(), key=lambda kv: -kv[1].bytes):
+    print(f"{tag:16s} {c.flops:11.3e} {c.bytes:11.3e} {sum(c.collective_bytes.values()):11.3e}  {dict((k, f'{v:.2e}') for k,v in c.collective_bytes.items())}")
+mem = compiled.memory_analysis()
+print(f"mem/dev GB: arg={mem.argument_size_in_bytes/2**30:.2f} temp={mem.temp_size_in_bytes/2**30:.2f}")

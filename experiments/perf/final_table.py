@@ -1,0 +1,37 @@
+"""Render the optimized roofline table (+ flash-adjusted columns) from
+experiments/dryrun/ artifacts, in EXPERIMENTS.md format."""
+import glob
+import json
+import sys
+
+root = sys.argv[1] if len(sys.argv) > 1 else "experiments/dryrun"
+rows = []
+for f in sorted(glob.glob(f"{root}/*__single.json")):
+    r = json.load(open(f))
+    if not r.get("ok"):
+        rows.append((r["arch"], r["shape"], None, r.get("error", "")[:60]))
+        continue
+    ro = r["roofline"]
+    fl = r.get("roofline_flash")
+    rows.append((ro["arch"], ro["shape"], ro, fl,
+                 r["memory"]["peak_per_device_gb"]))
+
+print(f"{'arch':24s} {'shape':12s} {'comp_s':>8s} {'mem_s':>8s} "
+      f"{'coll_s':>8s} {'dom':>6s} {'useful':>7s} {'roof%':>7s} "
+      f"{'GB/dev':>7s} | {'flash roof%':>11s} {'flash dom':>9s}")
+for row in rows:
+    if row[2] is None:
+        print(f"{row[0]:24s} {row[1]:12s} FAILED {row[3]}")
+        continue
+    arch, shape, ro, fl, gb = row
+    flash = (f"{100*fl['roofline_fraction']:10.2f}% {fl['dominant']:>9s}"
+             if fl else f"{'—':>11s} {'—':>9s}")
+    print(f"{arch:24s} {shape:12s} {ro['compute_s']:8.3f} "
+          f"{ro['memory_s']:8.3f} {ro['collective_s']:8.3f} "
+          f"{ro['dominant'][:6]:>6s} {100*ro['useful_flops_ratio']:6.1f}% "
+          f"{100*ro['roofline_fraction']:6.2f}% {gb:7.2f} | {flash}")
+
+multi_ok = sum(1 for f in glob.glob(f"{root}/*__multi.json")
+               if json.load(open(f)).get("ok"))
+single_ok = sum(1 for r in rows if r[2] is not None)
+print(f"\nsingle-pod ok: {single_ok}  multi-pod ok: {multi_ok}")

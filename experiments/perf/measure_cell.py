@@ -1,0 +1,21 @@
+"""Measure one cell and print roofline terms (no cache)."""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import sys, json, time
+from repro.launch.dryrun import lower_cell
+from repro.roofline import analysis
+from repro.roofline.hlo_cost import module_cost
+
+arch, shape = sys.argv[1], sys.argv[2]
+multi = len(sys.argv) > 3 and sys.argv[3] == "multi"
+t0 = time.time()
+compiled, cfg, shp, meta = lower_cell(arch, shape, multi)
+mem = compiled.memory_analysis()
+roof = analysis.analyze(compiled.as_text(), cfg, shp, "multi" if multi else "single",
+                        meta["chips"], compiled.cost_analysis(), mem)
+d = roof.as_dict()
+print(json.dumps({k: (round(v, 5) if isinstance(v, float) else v)
+                  for k, v in d.items() if k != "collective_breakdown"}, indent=1))
+print("collectives:", {k: f"{v:.2e}" for k, v in d["collective_breakdown"].items()})
+print(f"mem/dev GB: {(mem.argument_size_in_bytes+mem.temp_size_in_bytes+mem.output_size_in_bytes-mem.alias_size_in_bytes)/2**30:.2f} (temp {mem.temp_size_in_bytes/2**30:.2f})")
+print(f"compile {time.time()-t0:.0f}s  microbatches={meta.get('microbatches')}")

@@ -1,0 +1,29 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import sys, re
+from repro.launch.dryrun import lower_cell
+from repro.roofline import hlo_cost as H
+
+arch, shape = sys.argv[1], sys.argv[2]
+compiled, cfg, shp, meta = lower_cell(arch, shape, False)
+comps, entry = H.parse_module(compiled.as_text())
+
+rows = []
+def walk(name, mult):
+    comp = comps[name]
+    for op in comp.ops:
+        if op.kind == "while":
+            t = H._trip_count(op)
+            for b in op.called:
+                if b in comps and ("region" in b):
+                    walk(b, mult * t)
+            continue
+        base = op.kind.replace("-start","")
+        if base in H._COLLECTIVES:
+            rows.append((op.result_bytes * mult, op.result_bytes, mult, base, op.op_name_meta[:110]))
+walk(entry, 1)
+rows.sort(key=lambda r: -r[0])
+tot = sum(r[0] for r in rows)
+print(f"total collective bytes/dev: {tot:.3e} over {len(rows)} sites")
+for r in rows[:18]:
+    print(f"{r[0]:.3e} (={r[1]:.2e} x{r[2]:4d}) {r[3]:20s} {r[4]}")

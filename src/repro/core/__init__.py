@@ -1,0 +1,7 @@
+# The paper's primary contribution: l1 sparse coding with proximal optimizers
+# (Prox-RMSProp / Prox-ADAM), debiasing, and the Pru / MM baselines.
+from repro.core import (masks, metrics, mm, optimizers, prox, pruning,  # noqa: F401
+                        quantize, schedule)
+from repro.core.optimizers import (get_optimizer, prox_adam, prox_rmsprop,  # noqa: F401
+                                   prox_sgd)
+from repro.core.prox import soft_threshold, tree_prox  # noqa: F401

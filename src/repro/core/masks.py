@@ -1,0 +1,42 @@
+"""Zero-mask extraction and debiasing (paper §2.4 'Retraining').
+
+Debiasing retrains the surviving (nonzero) weights with the zero pattern
+frozen and the regularizer off, removing l1 shrinkage bias. Mechanically:
+``mask = (w != 0)``; during retraining both grads and post-update params are
+multiplied by the mask (see ProxOptimizer.update(mask=...)).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.prox import default_regularized_predicate
+
+PyTree = Any
+
+
+def zero_mask(params: PyTree, predicate: Optional[Callable] = None) -> PyTree:
+    """mask leaf = 1 where weight is nonzero (or leaf not regularized)."""
+    predicate = predicate or default_regularized_predicate
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    out = []
+    for path, leaf in flat:
+        name = jax.tree_util.keystr(path)
+        if predicate(name, leaf):
+            out.append((leaf != 0).astype(jnp.float32))
+        else:
+            out.append(jnp.ones_like(leaf, dtype=jnp.float32))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def apply_mask(params: PyTree, mask: PyTree) -> PyTree:
+    return jax.tree.map(lambda p, m: p * m.astype(p.dtype), params, mask)
+
+
+def mask_density(mask: PyTree) -> jax.Array:
+    """Fraction of kept (nonzero) weights across masked leaves."""
+    kept = sum(jnp.sum(m) for m in jax.tree.leaves(mask))
+    total = sum(m.size for m in jax.tree.leaves(mask))
+    return kept / total

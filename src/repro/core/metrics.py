@@ -1,0 +1,89 @@
+"""Compression-rate reporting (paper's compression tables, A1-A4).
+
+compression_rate = #zeros / #total over regularized leaves; the 'x' factor in
+the paper's tables is total/nnz.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.prox import default_regularized_predicate
+
+PyTree = Any
+
+
+def layer_compression(params: PyTree,
+                      predicate: Optional[Callable] = None) -> dict[str, dict]:
+    """Per-layer nnz/total table, mirroring paper Tables A1-A4."""
+    predicate = predicate or default_regularized_predicate
+    flat, _ = jax.tree_util.tree_flatten_with_path(params)
+    table: dict[str, dict] = {}
+    for path, leaf in flat:
+        name = jax.tree_util.keystr(path)
+        if not predicate(name, leaf):
+            continue
+        nnz = int(jnp.sum(leaf != 0))
+        total = int(leaf.size)
+        table[name] = {
+            "nnz": nnz,
+            "total": total,
+            "compression_rate": 1.0 - nnz / total,
+            "x_factor": (total / nnz) if nnz else float("inf"),
+        }
+    return table
+
+
+def total_compression(params: PyTree,
+                      predicate: Optional[Callable] = None) -> dict:
+    table = layer_compression(params, predicate)
+    nnz = sum(v["nnz"] for v in table.values())
+    total = sum(v["total"] for v in table.values())
+    return {
+        "nnz": nnz,
+        "total": total,
+        "compression_rate": 1.0 - nnz / max(total, 1),
+        "x_factor": (total / nnz) if nnz else float("inf"),
+    }
+
+
+def compression_rate(params: PyTree,
+                     predicate: Optional[Callable] = None) -> float:
+    return total_compression(params, predicate)["compression_rate"]
+
+
+def format_table(table: dict[str, dict], title: str = "") -> str:
+    lines = []
+    if title:
+        lines.append(title)
+    lines.append(f"{'layer':48s} {'nnz/total':>24s} {'rate':>8s} {'x':>8s}")
+    for k, v in table.items():
+        x = v["x_factor"]
+        xs = f"{x:.0f}x" if x != float("inf") else "inf"
+        lines.append(f"{k:48s} {v['nnz']:>11d}/{v['total']:<12d} "
+                     f"{100*v['compression_rate']:7.2f}% {xs:>8s}")
+    return "\n".join(lines)
+
+
+def model_size_bytes(params: PyTree, sparse: bool = False,
+                     index_bytes: int = 4) -> int:
+    """Dense vs CSR-compressed model size (paper Table 3 'Model Size').
+
+    Sparse size follows the CSR accounting: nnz * (value + column index)
+    + rows * row-pointer, per regularized 2D leaf; non-regularized leaves
+    stay dense.
+    """
+    total = 0
+    flat, _ = jax.tree_util.tree_flatten_with_path(params)
+    for path, leaf in flat:
+        name = jax.tree_util.keystr(path)
+        itemsize = leaf.dtype.itemsize
+        if sparse and default_regularized_predicate(name, leaf):
+            nnz = int(jnp.sum(leaf != 0))
+            rows = leaf.shape[0] if leaf.ndim >= 1 else 1
+            total += nnz * (itemsize + index_bytes) + (rows + 1) * index_bytes
+        else:
+            total += leaf.size * itemsize
+    return total

@@ -1,0 +1,122 @@
+"""MM baseline: learning-compression via the method of multipliers
+(Carreira-Perpinan & Idelbayev 2018; paper §4.4, Eq. (3)-(4)).
+
+The constrained problem  min L(w) + alpha*Psi(theta)  s.t. w = theta  is
+solved on the augmented Lagrangian
+
+    L(w) + (mu/2)||w - theta||^2 - lam^T (w - theta) + alpha*Psi(theta)
+
+by alternating:
+  (L-step)  several SGD steps on w of L(w) + (mu/2)||w - theta - lam/mu||^2,
+  (C-step)  theta <- prox_{(alpha/mu)*Psi}(w - lam/mu)   (closed form),
+  (M-step)  lam <- lam - mu (w - theta),    mu <- mu * mu_growth every T steps.
+
+Memory: (w, grad, theta, lam) — ~2x the prox method's (w, grad) + (m, v),
+which is the paper's Table 2 memory argument; we surface the state size in
+``mm_state_bytes`` so benchmarks can report it.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.prox import default_regularized_predicate, soft_threshold
+
+PyTree = Any
+
+
+class MMState(NamedTuple):
+    step: jax.Array
+    theta: PyTree        # auxiliary (compressed) copy of the params
+    lam: PyTree          # Lagrange multipliers
+    mu: jax.Array        # penalty parameter (ramped to infinity)
+    momentum: PyTree     # SGD momentum buffer for the L-step
+
+
+@dataclasses.dataclass(frozen=True)
+class MMConfig:
+    alpha: float = 1e-3          # regularization strength on theta
+    mu0: float = 9.76e-5         # paper Table 2 (Lenet-5 setting)
+    mu_growth: float = 1.1
+    mu_every: int = 4000         # growth cadence (paper: x1.1 per 4k iters)
+    c_step_every: int = 4000     # compression cadence (paper Fig. 8)
+    learning_rate: float = 1e-2
+    sgd_momentum: float = 0.9
+
+
+def mm_init(params: PyTree, cfg: MMConfig) -> MMState:
+    zeros = jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+    return MMState(step=jnp.zeros((), jnp.int32),
+                   theta=jax.tree.map(lambda p: p.astype(jnp.float32), params),
+                   lam=zeros,
+                   mu=jnp.asarray(cfg.mu0, jnp.float32),
+                   momentum=jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32),
+                                         params))
+
+
+def mm_update(grads: PyTree, state: MMState, params: PyTree, cfg: MMConfig,
+              predicate: Optional[Callable] = None) -> tuple[PyTree, MMState]:
+    """One MM iteration = one L-step SGD update (+ periodic C/M steps)."""
+    predicate = predicate or default_regularized_predicate
+    t = state.step + 1
+    mu = state.mu
+
+    flat_p, treedef = jax.tree_util.tree_flatten_with_path(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_th = treedef.flatten_up_to(state.theta)
+    flat_lm = treedef.flatten_up_to(state.lam)
+    flat_mo = treedef.flatten_up_to(state.momentum)
+
+    do_c = (t % cfg.c_step_every) == 0
+    do_mu = (t % cfg.mu_every) == 0
+
+    new_p, new_th, new_lm, new_mo = [], [], [], []
+    for (path, p), g, th, lm, mo in zip(flat_p, flat_g, flat_th, flat_lm, flat_mo):
+        name = jax.tree_util.keystr(path)
+        p32, g32 = p.astype(jnp.float32), g.astype(jnp.float32)
+        if predicate(name, p):
+            # L-step gradient of L(w) + (mu/2)||w - theta - lam/mu||^2
+            g_aug = g32 + mu * (p32 - th) - lm
+        else:
+            g_aug = g32
+        mo2 = cfg.sgd_momentum * mo + g_aug
+        w2 = p32 - cfg.learning_rate * mo2
+
+        if predicate(name, p):
+            # C-step: theta <- prox_{(alpha/mu) l1}(w - lam/mu)
+            th_c = soft_threshold(w2 - lm / mu, cfg.alpha / mu)
+            th2 = jnp.where(do_c, th_c, th)
+            # M-step (same cadence as C-step)
+            lm2 = jnp.where(do_c, lm - mu * (w2 - th2), lm)
+        else:
+            th2, lm2 = th, lm
+
+        new_p.append(w2.astype(p.dtype))
+        new_th.append(th2)
+        new_lm.append(lm2)
+        new_mo.append(mo2)
+
+    mu2 = jnp.where(do_mu, mu * cfg.mu_growth, mu)
+    unf = jax.tree_util.tree_unflatten
+    return (unf(treedef, new_p),
+            MMState(step=t, theta=unf(treedef, new_th), lam=unf(treedef, new_lm),
+                    mu=mu2, momentum=unf(treedef, new_mo)))
+
+
+def mm_final_params(params: PyTree, state: MMState,
+                    predicate: Optional[Callable] = None) -> PyTree:
+    """At convergence MM returns theta (the compressed copy) for regularized
+    leaves and w elsewhere."""
+    predicate = predicate or default_regularized_predicate
+    flat_p, treedef = jax.tree_util.tree_flatten_with_path(params)
+    flat_th = treedef.flatten_up_to(state.theta)
+    out = [th.astype(p.dtype) if predicate(jax.tree_util.keystr(path), p) else p
+           for (path, p), th in zip(flat_p, flat_th)]
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def mm_state_bytes(state: MMState) -> int:
+    return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(state))

@@ -1,0 +1,162 @@
+"""Prox-RMSProp (paper Alg. 1), Prox-ADAM (paper Alg. 2) and Prox-SGD.
+
+Implemented as self-contained optax-style GradientTransformations (pure
+``init``/``update`` pairs over pytrees, no optax dependency). Each update is:
+
+    step:  d_t from the base rule (SGD / RMSProp / ADAM)
+    w_t <- prox_{eta_t * lambda * ||.||_1}( w_{t-1} - eta_t * d_t )
+
+i.e. the prox is applied to the *post-step iterate* with threshold
+``eta_t * lambda`` exactly as in the paper's Algorithms 1-2. lambda may follow
+a schedule (core/schedule.py). A ``mask`` pytree (0/1 per element) supports
+the debiasing phase: masked entries receive zero updates and stay zero.
+
+The elementwise inner update can be routed through the fused Pallas kernel
+(`repro.kernels.prox_adam`) with ``use_fused_kernel=True``; the pure-jnp path
+here is the oracle the kernel is tested against.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import prox as prox_lib
+
+PyTree = Any
+Schedule = Callable[[jax.Array], jax.Array]  # step -> value
+
+
+def _as_schedule(v) -> Schedule:
+    if callable(v):
+        return v
+    return lambda step: jnp.asarray(v, dtype=jnp.float32)
+
+
+class ProxState(NamedTuple):
+    step: jax.Array          # int32 scalar
+    m: PyTree                # 1st moment (zeros pytree for rmsprop/sgd)
+    v: PyTree                # 2nd moment (zeros pytree for sgd)
+
+
+@dataclasses.dataclass(frozen=True)
+class ProxOptimizer:
+    """A (init, update) pair. ``update`` returns (new_params, new_state)."""
+    init: Callable[[PyTree], ProxState]
+    update: Callable[..., tuple[PyTree, ProxState]]
+    name: str = "prox_opt"
+
+
+def _zeros_like_tree(params: PyTree) -> PyTree:
+    return jax.tree.map(lambda p: jnp.zeros_like(p, dtype=jnp.float32), params)
+
+
+def _make(name: str,
+          direction_fn: Callable,
+          learning_rate,
+          lam,
+          prox_name: str = "l1",
+          prox_kwargs: Optional[dict] = None,
+          regularized_predicate=None,
+          weight_decay: float = 0.0) -> ProxOptimizer:
+    lr_s = _as_schedule(learning_rate)
+    lam_s = _as_schedule(lam)
+    prox_fn = prox_lib.get_prox(prox_name, **(prox_kwargs or {}))
+    predicate = regularized_predicate or prox_lib.default_regularized_predicate
+
+    def init(params: PyTree) -> ProxState:
+        return ProxState(step=jnp.zeros((), jnp.int32),
+                         m=_zeros_like_tree(params),
+                         v=_zeros_like_tree(params))
+
+    def update(grads: PyTree, state: ProxState, params: PyTree,
+               mask: Optional[PyTree] = None) -> tuple[PyTree, ProxState]:
+        t = state.step + 1
+        eta = lr_s(t)
+        tau = eta * lam_s(t)
+
+        if mask is not None:
+            grads = jax.tree.map(lambda g, mk: g * mk.astype(g.dtype), grads, mask)
+
+        flat_p, treedef = jax.tree_util.tree_flatten_with_path(params)
+        flat_g = treedef.flatten_up_to(grads)
+        flat_m = treedef.flatten_up_to(state.m)
+        flat_v = treedef.flatten_up_to(state.v)
+
+        new_p, new_m, new_v = [], [], []
+        for (path, p), g, m, v in zip(flat_p, flat_g, flat_m, flat_v):
+            name_str = jax.tree_util.keystr(path)
+            g32 = g.astype(jnp.float32)
+            p32 = p.astype(jnp.float32)
+            if weight_decay:
+                g32 = g32 + weight_decay * p32
+            d, m2, v2 = direction_fn(g32, m, v, t)
+            z = p32 - eta * d
+            if predicate(name_str, p):
+                z = prox_fn(z, tau)
+            new_p.append(z.astype(p.dtype))
+            new_m.append(m2)
+            new_v.append(v2)
+
+        if mask is not None:
+            flat_mask = treedef.flatten_up_to(mask)
+            new_p = [q * mk.astype(q.dtype) for q, mk in zip(new_p, flat_mask)]
+
+        return (jax.tree_util.tree_unflatten(treedef, new_p),
+                ProxState(step=t,
+                          m=jax.tree_util.tree_unflatten(treedef, new_m),
+                          v=jax.tree_util.tree_unflatten(treedef, new_v)))
+
+    return ProxOptimizer(init=init, update=update, name=name)
+
+
+# ---------------------------------------------------------------------------
+# The three rules
+# ---------------------------------------------------------------------------
+
+def prox_sgd(learning_rate, lam=0.0, momentum: float = 0.0, **kw) -> ProxOptimizer:
+    """Prox-SGD (stochastic proximal gradient, paper Eq. (2))."""
+    def direction(g, m, v, t):
+        if momentum:
+            m2 = momentum * m + g
+            return m2, m2, v
+        return g, m, v
+    return _make("prox_sgd", direction, learning_rate, lam, **kw)
+
+
+def prox_rmsprop(learning_rate, lam=0.0, beta: float = 0.9,
+                 eps: float = 1e-8, **kw) -> ProxOptimizer:
+    """Prox-RMSProp — paper Algorithm 1.
+
+    v_t = beta*v + (1-beta)*g^2 ; w <- prox(w - eta * g/(sqrt(v_t)+eps)).
+    """
+    def direction(g, m, v, t):
+        v2 = beta * v + (1.0 - beta) * g * g
+        return g / (jnp.sqrt(v2) + eps), m, v2
+    return _make("prox_rmsprop", direction, learning_rate, lam, **kw)
+
+
+def prox_adam(learning_rate, lam=0.0, b1: float = 0.9, b2: float = 0.999,
+              eps: float = 1e-8, **kw) -> ProxOptimizer:
+    """Prox-ADAM — paper Algorithm 2 (with bias correction)."""
+    def direction(g, m, v, t):
+        m2 = b1 * m + (1.0 - b1) * g
+        v2 = b2 * v + (1.0 - b2) * g * g
+        tf = t.astype(jnp.float32)
+        mhat = m2 / (1.0 - jnp.power(b1, tf))
+        vhat = v2 / (1.0 - jnp.power(b2, tf))
+        return mhat / (jnp.sqrt(vhat) + eps), m2, v2
+    return _make("prox_adam", direction, learning_rate, lam, **kw)
+
+
+_REGISTRY = {"prox_sgd": prox_sgd, "prox_rmsprop": prox_rmsprop,
+             "prox_adam": prox_adam, "sgd": prox_sgd,
+             "rmsprop": prox_rmsprop, "adam": prox_adam}
+
+
+def get_optimizer(name: str, **kwargs) -> ProxOptimizer:
+    if name not in _REGISTRY:
+        raise ValueError(f"unknown optimizer {name!r}; have {sorted(_REGISTRY)}")
+    return _REGISTRY[name](**kwargs)

@@ -1,0 +1,146 @@
+"""Proximal operators for sparse coding (paper §2.2).
+
+The paper's central mechanism: the proximal operator of the l1 regularizer
+``prox_{eta*lambda*||.||_1}(z)_i = sgn(z_i) * max(|z_i| - eta*lambda, 0)``
+(soft thresholding) applied after each optimizer step, which produces *exact*
+zeros during training.
+
+Beyond the paper we add a block group-l1 prox so sparsity can be induced in
+MXU-aligned blocks (TPU-native serving; see DESIGN.md §2) plus elastic-net and
+hard-threshold variants used in ablations.
+
+All operators are elementwise (or block-local) pure functions: they are
+shard-invariant under any PartitionSpec and compose with pjit for free.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+PyTree = Any
+
+
+def soft_threshold(z: Array, tau) -> Array:
+    """prox of tau*||.||_1: sgn(z) * max(|z| - tau, 0).
+
+    Written in the min/max form of the paper's OpenCL kernel (Fig. 4):
+    ``min(max(z - tau, 0), z + tau)`` — identical result, one fewer select
+    on TPU's VPU than the sgn/abs form.
+    """
+    tau = jnp.asarray(tau, dtype=z.dtype)
+    return jnp.minimum(jnp.maximum(z - tau, 0), z + tau)
+
+
+def prox_l1(z: Array, tau) -> Array:
+    """Alias matching the paper's notation prox_{tau*||.||_1}."""
+    return soft_threshold(z, tau)
+
+
+def hard_threshold(z: Array, tau) -> Array:
+    """prox of the l0 pseudo-norm ball surrogate: zero out |z| <= tau.
+
+    This is the thresholding used by the magnitude-pruning baseline (Pru).
+    """
+    tau = jnp.asarray(tau, dtype=z.dtype)
+    return jnp.where(jnp.abs(z) > tau, z, jnp.zeros_like(z))
+
+
+def prox_elastic_net(z: Array, tau_l1, tau_l2) -> Array:
+    """prox of tau_l1*||.||_1 + (tau_l2/2)*||.||_2^2 (ablation regularizer)."""
+    tau_l2 = jnp.asarray(tau_l2, dtype=z.dtype)
+    return soft_threshold(z, tau_l1) / (1.0 + tau_l2)
+
+
+def _block_reduce_l2(z: Array, block: tuple[int, int]) -> Array:
+    """Per-block l2 norms for a 2D array padded to block multiples."""
+    br, bc = block
+    r, c = z.shape
+    pr, pc = (-r) % br, (-c) % bc
+    zp = jnp.pad(z, ((0, pr), (0, pc)))
+    zb = zp.reshape((r + pr) // br, br, (c + pc) // bc, bc)
+    return jnp.sqrt(jnp.sum(zb.astype(jnp.float32) ** 2, axis=(1, 3)))
+
+
+def prox_group_l1_blocks(z: Array, tau, block: tuple[int, int] = (128, 128)) -> Array:
+    """Group-l1 (block soft-threshold): shrink whole blocks toward zero.
+
+    prox of tau * sum_g ||z_g||_2 over non-overlapping ``block`` tiles of a 2D
+    weight: z_g <- z_g * max(0, 1 - tau/||z_g||_2). Whole blocks hit exact
+    zero, producing BCSR-ready sparsity (beyond-paper, DESIGN.md §2).
+    Non-2D inputs fall back to elementwise soft thresholding.
+    """
+    if z.ndim != 2:
+        return soft_threshold(z, tau)
+    br, bc = block
+    r, c = z.shape
+    norms = _block_reduce_l2(z, block)  # (R, C) block grid
+    tau = jnp.asarray(tau, dtype=jnp.float32)
+    scale = jnp.maximum(0.0, 1.0 - tau / jnp.maximum(norms, 1e-30))
+    scale_full = jnp.repeat(jnp.repeat(scale, br, axis=0), bc, axis=1)[:r, :c]
+    return (z.astype(jnp.float32) * scale_full).astype(z.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Regularizer registry: name -> (penalty_value_fn, prox_fn)
+# ---------------------------------------------------------------------------
+
+def l1_penalty(w: Array) -> Array:
+    return jnp.sum(jnp.abs(w.astype(jnp.float32)))
+
+
+def group_l1_penalty(w: Array, block: tuple[int, int] = (128, 128)) -> Array:
+    if w.ndim != 2:
+        return l1_penalty(w)
+    return jnp.sum(_block_reduce_l2(w, block))
+
+
+def get_prox(name: str, **kwargs) -> Callable[[Array, Any], Array]:
+    """Look up a prox operator by name ('l1', 'group_l1', 'elastic_net', 'none')."""
+    if name == "l1":
+        return soft_threshold
+    if name == "group_l1":
+        block = kwargs.get("block", (128, 128))
+        return functools.partial(prox_group_l1_blocks, block=block)
+    if name == "elastic_net":
+        tau_l2 = kwargs.get("tau_l2", 0.0)
+        return lambda z, tau: prox_elastic_net(z, tau, tau_l2)
+    if name == "none":
+        return lambda z, tau: z
+    raise ValueError(f"unknown prox: {name!r}")
+
+
+def tree_prox(params: PyTree, tau, prox_fn=soft_threshold,
+              predicate: Callable[[str, Array], bool] | None = None) -> PyTree:
+    """Apply a prox operator across a param pytree.
+
+    ``predicate(path_str, leaf)`` selects which leaves are regularized; the
+    default regularizes every weight *matrix* (ndim >= 2) and leaves biases,
+    norm scales and other vectors untouched — matching the paper, which
+    compresses conv/fc weights only (Tables A1-A4).
+    """
+    if predicate is None:
+        predicate = default_regularized_predicate
+
+    flat = jax.tree_util.tree_flatten_with_path(params)
+    leaves, treedef = flat
+    out = []
+    for path, leaf in leaves:
+        name = jax.tree_util.keystr(path)
+        out.append(prox_fn(leaf, tau) if predicate(name, leaf) else leaf)
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+_NEVER_REGULARIZE = ("bias", "scale", "norm", "ln_", "_a_param", "decay",
+                     "time_decay", "time_first", "pos_emb", "rglru_a")
+
+
+def default_regularized_predicate(name: str, leaf: Array) -> bool:
+    """Regularize weight matrices/filters only (paper compresses conv+fc)."""
+    lname = name.lower()
+    if any(k in lname for k in _NEVER_REGULARIZE):
+        return False
+    return leaf.ndim >= 2

@@ -1,0 +1,60 @@
+"""Pru baseline: magnitude pruning + retraining (Han et al. 2015, paper §4).
+
+Pipeline (as the paper evaluates it):
+  1. train the dense reference model,
+  2. threshold: zero every regularized weight with |w| below a per-layer
+     threshold chosen from a quality parameter q (threshold = q * std(w),
+     Han et al.'s rule) OR from a target global sparsity,
+  3. optional retraining with the zero mask frozen (Pru(Retrain)).
+
+Step 3 reuses the debias machinery (core/masks.py + optimizer mask arg), so
+Pru and SpC(Retrain) share one code path — mirroring the paper's observation
+that retraining is the same operation in both methods.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.prox import default_regularized_predicate, hard_threshold
+
+PyTree = Any
+
+
+def magnitude_prune_std(params: PyTree, quality: float,
+                        predicate: Optional[Callable] = None) -> PyTree:
+    """Han et al. rule: per-layer threshold = quality * std(layer)."""
+    predicate = predicate or default_regularized_predicate
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    out = []
+    for path, leaf in flat:
+        name = jax.tree_util.keystr(path)
+        if predicate(name, leaf):
+            tau = quality * jnp.std(leaf.astype(jnp.float32))
+            out.append(hard_threshold(leaf, tau.astype(leaf.dtype)))
+        else:
+            out.append(leaf)
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def magnitude_prune_global(params: PyTree, sparsity: float,
+                           predicate: Optional[Callable] = None) -> PyTree:
+    """Zero the smallest-|w| fraction ``sparsity`` across all regularized leaves."""
+    predicate = predicate or default_regularized_predicate
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    mags = [jnp.abs(leaf.astype(jnp.float32)).ravel()
+            for path, leaf in flat
+            if predicate(jax.tree_util.keystr(path), leaf)]
+    if not mags:
+        return params
+    allmag = jnp.concatenate(mags)
+    k = jnp.clip(jnp.asarray(sparsity * allmag.size, jnp.int32), 0, allmag.size - 1)
+    tau = jnp.sort(allmag)[k]
+    out = []
+    for path, leaf in flat:
+        name = jax.tree_util.keystr(path)
+        out.append(hard_threshold(leaf, tau.astype(leaf.dtype))
+                   if predicate(name, leaf) else leaf)
+    return jax.tree_util.tree_unflatten(treedef, out)

@@ -1,0 +1,41 @@
+"""Learning-rate and lambda schedules.
+
+The paper uses constant lr/lambda; we add warmup-cosine lr and a lambda ramp
+(0 -> lambda over warmup steps) which stabilizes very high compression runs —
+an ablation recorded in EXPERIMENTS.md.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(value: float):
+    return lambda step: jnp.asarray(value, jnp.float32)
+
+
+def warmup_cosine(peak: float, warmup_steps: int, total_steps: int,
+                  floor: float = 0.0):
+    def sched(step):
+        step = step.astype(jnp.float32)
+        warm = peak * step / max(warmup_steps, 1)
+        prog = jnp.clip((step - warmup_steps) / max(total_steps - warmup_steps, 1),
+                        0.0, 1.0)
+        cos = floor + 0.5 * (peak - floor) * (1.0 + jnp.cos(jnp.pi * prog))
+        return jnp.where(step < warmup_steps, warm, cos)
+    return sched
+
+
+def lambda_ramp(lam: float, ramp_steps: int):
+    """0 -> lam linearly over ramp_steps, then constant (beyond-paper)."""
+    def sched(step):
+        frac = jnp.clip(step.astype(jnp.float32) / max(ramp_steps, 1), 0.0, 1.0)
+        return jnp.asarray(lam, jnp.float32) * frac
+    return sched
+
+
+def step_decay(value: float, decay: float, every: int):
+    """value * decay^(step // every) — used by the MM baseline's mu ramp."""
+    def sched(step):
+        k = (step // every).astype(jnp.float32)
+        return jnp.asarray(value, jnp.float32) * jnp.power(decay, k)
+    return sched

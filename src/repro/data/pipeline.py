@@ -1,0 +1,72 @@
+"""Host data pipeline: per-host sharded batches + background prefetch.
+
+On a real multi-host TPU pod each process feeds its addressable shard of the
+global batch (``jax.make_array_from_process_local_data`` pattern). In this
+single-process container the pipeline still exercises the same interfaces:
+``ShardedBatcher`` computes the host slice from (process_index, host_count)
+and ``Prefetcher`` overlaps host batch synthesis with device compute.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Callable, Iterator, Optional
+
+import jax
+
+from repro.data.synthetic import TokenStreamConfig, token_batch
+
+
+class ShardedBatcher:
+    """Deterministic per-host batch shards keyed by step (restart-safe)."""
+
+    def __init__(self, cfg: TokenStreamConfig,
+                 process_index: Optional[int] = None,
+                 process_count: Optional[int] = None):
+        self.cfg = cfg
+        self.process_index = (jax.process_index() if process_index is None
+                              else process_index)
+        self.process_count = (jax.process_count() if process_count is None
+                              else process_count)
+        assert cfg.global_batch % self.process_count == 0
+        self.host_size = cfg.global_batch // self.process_count
+        self.host_start = self.process_index * self.host_size
+
+    def batch(self, step: int) -> dict:
+        return token_batch(self.cfg, step, self.host_start, self.host_size)
+
+    def stream(self, start_step: int = 0) -> Iterator[dict]:
+        step = start_step
+        while True:
+            yield self.batch(step)
+            step += 1
+
+
+class Prefetcher:
+    """Background-thread prefetch of host batches (depth-bounded queue)."""
+
+    def __init__(self, make_batch: Callable[[int], dict], start_step: int = 0,
+                 depth: int = 2):
+        self._q: queue.Queue = queue.Queue(maxsize=depth)
+        self._stop = threading.Event()
+
+        def worker():
+            step = start_step
+            while not self._stop.is_set():
+                try:
+                    self._q.put((step, make_batch(step)), timeout=0.5)
+                    step += 1
+                except queue.Full:
+                    continue
+
+        self._t = threading.Thread(target=worker, daemon=True)
+        self._t.start()
+
+    def __iter__(self):
+        return self
+
+    def __next__(self):
+        return self._q.get()
+
+    def close(self):
+        self._stop.set()

@@ -1,0 +1,110 @@
+"""Deterministic synthetic data streams.
+
+Design constraints from the fault-tolerance story (DESIGN.md §5): batches are
+a pure function of (seed, step), so a restarted/elastically-rescaled job
+replays the exact token stream with no data-loader state to checkpoint.
+Each host materializes only its shard of the global batch
+(``host_slice``), which is how the pipeline scales to 1000+ nodes.
+
+Token streams use a mixture of Zipf-distributed unigrams and a deterministic
+k-gram structure so that a real learning signal exists (loss decreases) —
+needed by the paper-reproduction benchmarks. Image streams generate
+class-conditional blobs for the CNN experiments (MNIST/CIFAR stand-ins).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class TokenStreamConfig:
+    vocab: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    structure: int = 8        # k-gram period giving predictable structure
+
+
+def token_batch(cfg: TokenStreamConfig, step: int,
+                host_start: int = 0, host_size: Optional[int] = None) -> dict:
+    """Batch for ``step``; host materializes rows [host_start, +host_size).
+
+    Generation is a pure function of (seed, step) over the GLOBAL batch and
+    each host slices its rows, so all hosts agree on the global batch
+    content regardless of process count (elastic-restart invariant)."""
+    host_size = host_size or cfg.global_batch
+    rng = np.random.default_rng((cfg.seed, step))
+    b, s, v = cfg.global_batch, cfg.seq_len, cfg.vocab
+    # Zipf-ish unigram base
+    ranks = rng.integers(1, 1000, size=(b, s + 1))
+    base = (v * (ranks.astype(np.float64) ** -1.1)).astype(np.int64) % v
+    # overlay deterministic k-gram structure: x[t] depends on x[t-structure]
+    k = cfg.structure
+    for t in range(k, s + 1):
+        mask = (np.arange(b) + t) % 3 == 0
+        base[mask, t] = (base[mask, t - k] * 31 + 7) % v
+    base = base[host_start:host_start + host_size]
+    tokens = base[:, :-1].astype(np.int32)
+    labels = base[:, 1:].astype(np.int32)
+    return {"inputs": jnp.asarray(tokens), "labels": jnp.asarray(labels)}
+
+
+def token_stream(cfg: TokenStreamConfig, start_step: int = 0) -> Iterator[dict]:
+    step = start_step
+    while True:
+        yield token_batch(cfg, step)
+        step += 1
+
+
+# ---------------------------------------------------------------------------
+# Synthetic image classification (MNIST / CIFAR stand-ins for the paper's
+# CNN experiments)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ImageStreamConfig:
+    image_shape: tuple          # (H, W, C)
+    n_classes: int
+    batch: int
+    seed: int = 0
+    noise: float = 0.35
+
+
+_PROTO_CACHE: dict = {}
+
+
+def _prototypes(cfg: ImageStreamConfig) -> np.ndarray:
+    key = (cfg.image_shape, cfg.n_classes, cfg.seed)
+    if key not in _PROTO_CACHE:
+        rng = np.random.default_rng(cfg.seed + 12345)
+        h, w, c = cfg.image_shape
+        protos = np.zeros((cfg.n_classes, h, w, c), np.float32)
+        yy, xx = np.mgrid[0:h, 0:w]
+        for cls in range(cfg.n_classes):
+            # class = mixture of 3 gaussian blobs at class-specific spots
+            for _ in range(3):
+                cy, cx = rng.uniform(0.2, 0.8, 2) * [h, w]
+                sig = rng.uniform(0.08, 0.2) * h
+                blob = np.exp(-((yy - cy) ** 2 + (xx - cx) ** 2) / (2 * sig ** 2))
+                protos[cls] += blob[..., None] * rng.uniform(0.5, 1.0, c)
+        _PROTO_CACHE[key] = protos / protos.max()
+    return _PROTO_CACHE[key]
+
+
+def image_batch(cfg: ImageStreamConfig, step: int) -> dict:
+    rng = np.random.default_rng((cfg.seed, step))
+    labels = rng.integers(0, cfg.n_classes, cfg.batch)
+    protos = _prototypes(cfg)
+    imgs = protos[labels] + cfg.noise * rng.normal(
+        size=(cfg.batch,) + cfg.image_shape).astype(np.float32)
+    return {"inputs": jnp.asarray(imgs, jnp.float32),
+            "labels": jnp.asarray(labels, jnp.int32)}
+
+
+MNIST_LIKE = ImageStreamConfig(image_shape=(28, 28, 1), n_classes=10, batch=128)
+CIFAR_LIKE = ImageStreamConfig(image_shape=(32, 32, 3), n_classes=10, batch=128)

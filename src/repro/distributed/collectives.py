@@ -1,0 +1,73 @@
+"""Distributed-optimization extras: error-feedback gradient compression.
+
+int8 quantized all-reduce with error feedback (1-bit-Adam / PowerSGD family,
+simplified): gradients are scaled per-leaf to int8 before the data-parallel
+reduction and the quantization residual is carried to the next step, so the
+compression error is compensated rather than accumulated. Under GSPMD the
+"all-reduce" is implicit (psum of sharded grads); we expose an explicit
+shard_map variant for meshes where the data-parallel reduction dominates the
+collective roofline term (see EXPERIMENTS.md §Perf napkin math: 4x fewer
+bytes on the 'data' axis at <1e-2 relative grad error).
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+def quantize_int8(x: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Symmetric per-tensor int8 quantization. Returns (q, scale)."""
+    x32 = x.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(x32)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x32 / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return q.astype(jnp.float32) * scale
+
+
+def ef_compress_grads(grads: PyTree, error: Optional[PyTree]
+                      ) -> tuple[PyTree, PyTree]:
+    """Error-feedback int8 compression of a gradient pytree.
+
+    Returns (decompressed_grads, new_error). The *decompressed* values are
+    what enters the all-reduce under GSPMD; on a real pod the int8 payload is
+    what crosses ICI (4x fewer bytes than fp32, 2x fewer than bf16).
+    """
+    if error is None:
+        error = jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+
+    def one(g, e):
+        target = g.astype(jnp.float32) + e
+        q, s = quantize_int8(target)
+        deq = dequantize_int8(q, s)
+        return deq.astype(g.dtype), target - deq
+
+    flat_g, treedef = jax.tree_util.tree_flatten(grads)
+    flat_e = treedef.flatten_up_to(error)
+    pairs = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    new_g = jax.tree_util.tree_unflatten(treedef, [p[0] for p in pairs])
+    new_e = jax.tree_util.tree_unflatten(treedef, [p[1] for p in pairs])
+    return new_g, new_e
+
+
+def psum_compressed(grads: PyTree, axis_name: str) -> PyTree:
+    """shard_map-side compressed reduction: quantize -> psum(int32) -> deq.
+
+    Used inside shard_map bodies where the data-parallel all-reduce is
+    explicit; int8 payloads are accumulated in int32 to avoid overflow, then
+    rescaled by the max participating scale.
+    """
+    def one(g):
+        q, s = quantize_int8(g)
+        acc = jax.lax.psum(q.astype(jnp.int32), axis_name)
+        smax = jax.lax.pmax(s, axis_name)
+        n = jax.lax.psum(jnp.ones((), jnp.float32), axis_name)
+        return (acc.astype(jnp.float32) * smax / n).astype(g.dtype)
+
+    return jax.tree.map(one, grads)

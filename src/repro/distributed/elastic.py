@@ -1,0 +1,50 @@
+"""Elastic scaling: restore any checkpoint onto any mesh.
+
+Checkpoints store host arrays + logical axes (never device layouts), so
+re-scaling a job is: build the new mesh -> derive NamedShardings from the
+same logical rules -> device_put at restore. This module packages that and
+validates divisibility (an axis that no longer divides falls back to
+replication, identically to sharding.py's constraint logic — the job *runs*,
+just with less parallelism on that tensor).
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+from jax.sharding import Mesh
+
+from repro.checkpoint.checkpointer import Checkpointer
+from repro.distributed.sharding import param_shardings
+
+PyTree = Any
+
+
+def restore_onto_mesh(ckpt: Checkpointer, step: int, like: PyTree,
+                      mesh: Mesh) -> PyTree:
+    """Elastic restore: place checkpoint arrays for the given mesh."""
+    shardings = param_shardings(like, mesh)
+    return ckpt.restore(step, like, shardings=shardings)
+
+
+def rescale_plan(old_mesh_shape: dict, new_mesh_shape: dict,
+                 global_batch: int) -> dict:
+    """Operator-facing summary of what changes when re-meshing.
+
+    Data parallel degree change rescales per-host batch; model-parallel
+    change re-partitions weights (free at restore); a shrink that breaks
+    divisibility is reported so the operator can adjust global batch.
+    """
+    def dp(shape):
+        return shape.get("pod", 1) * shape.get("data", 1)
+
+    old_dp, new_dp = dp(old_mesh_shape), dp(new_mesh_shape)
+    plan = {
+        "old_dp": old_dp, "new_dp": new_dp,
+        "old_tp": old_mesh_shape.get("model", 1),
+        "new_tp": new_mesh_shape.get("model", 1),
+        "batch_divisible": global_batch % new_dp == 0,
+        "per_replica_batch": global_batch // new_dp
+        if global_batch % new_dp == 0 else None,
+    }
+    return plan

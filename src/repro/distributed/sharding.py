@@ -1,0 +1,232 @@
+"""Logical-axis sharding rules (DP / FSDP / TP / EP / SP).
+
+Model code annotates activations with *logical* axis names via
+``shard_ann(x, axes)``; params get logical axes from path-based rules
+(``param_logical_axes``). A mesh context (``use_mesh``) maps logical axes to
+physical mesh axes with divisibility checks — an axis that doesn't divide is
+silently replicated, which is what makes e.g. MQA (kv=1) work on a model=16
+mesh while GQA (kv=16) shards.
+
+Physical mesh axes: ("pod", "data", "model").
+  batch            -> ("pod", "data")      data parallelism across pods
+  heads/kv/mlp/
+  vocab/experts/lru-> "model"              tensor / expert parallelism
+  embed (params)   -> "data"               FSDP (ZeRO-3) weight sharding
+  cache_seq        -> "model"              sequence-parallel decode
+  capacity         -> "data"               MoE buffer sharding
+"""
+from __future__ import annotations
+
+import contextlib
+import re
+import threading
+from typing import Any, Optional, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_ctx = threading.local()
+
+ACT_RULES: dict[str, Any] = {
+    "batch": ("pod", "data"),
+    "seq": None,
+    "embed": None,
+    "heads": "model",
+    "kv_heads": "model",
+    "head_dim": None,
+    "mlp": "model",
+    "vocab": "model",
+    "experts": "model",
+    "capacity": "data",
+    "cache_seq": "model",
+    "lru": "model",
+    "rwkv_heads": "model",
+    "conv": None,
+    # sequence-parallel residual stream (Megatron-SP style): the scan carry
+    # between layers is seq-sharded over 'model', shrinking the per-layer
+    # bwd residual stack by the TP degree (§Perf iteration C3). Norms/MLP/
+    # projections are per-token so this adds no collectives there; XLA
+    # re-shards at attention (KV gather) where cross-token work happens.
+    "res_seq": "model",
+    # FALLBACK sequence sharding for attention internals: claims 'model'
+    # only when no primary axis (heads/kv) could — e.g. smollm's 15 heads
+    # on a 16-way axis replicate attention 16x without it (§Perf A1).
+    "seq_fb": "model",
+}
+
+_FALLBACK_AXES = {"seq_fb"}
+
+PARAM_RULES: dict[str, Any] = {
+    "layers": None,
+    "embed": "data",          # FSDP axis for weight matrices
+    "heads": "model",
+    "kv_heads": "model",
+    "head_dim": None,
+    "mlp": "model",
+    "vocab": "model",
+    "experts": "model",
+    "lru": "model",
+    "rwkv_heads": "model",
+    "lora": None,
+    "conv": None,
+    "none": None,
+}
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Optional[Mesh], act_rules: Optional[dict] = None):
+    """Context under which shard_ann applies with_sharding_constraint."""
+    prev = getattr(_ctx, "state", None)
+    _ctx.state = (mesh, act_rules or ACT_RULES) if mesh is not None else None
+    try:
+        yield
+    finally:
+        _ctx.state = prev
+
+
+def current_mesh() -> Optional[Mesh]:
+    st = getattr(_ctx, "state", None)
+    return st[0] if st else None
+
+
+def _axes_to_spec(logical: Sequence[Optional[str]], shape, mesh: Mesh,
+                  rules: dict) -> P:
+    """Two-pass assignment: primary logical axes claim mesh axes first;
+    fallback axes (seq_fb) only take what remains unclaimed."""
+    taken: set[str] = set()
+    spec: list = [None] * len(logical)
+
+    def assign(i, dim, ax):
+        phys = rules.get(ax) if ax else None
+        if phys is None:
+            return
+        phys_t = (phys,) if isinstance(phys, str) else tuple(phys)
+        phys_t = tuple(a for a in phys_t if a in mesh.shape and a not in taken)
+        size = 1
+        for a in phys_t:
+            size *= mesh.shape[a]
+        if phys_t and dim % size == 0 and dim > 0:
+            spec[i] = phys_t if len(phys_t) > 1 else phys_t[0]
+            taken.update(phys_t)
+
+    for i, (dim, ax) in enumerate(zip(shape, logical)):
+        if ax not in _FALLBACK_AXES:
+            assign(i, dim, ax)
+    for i, (dim, ax) in enumerate(zip(shape, logical)):
+        if ax in _FALLBACK_AXES:
+            assign(i, dim, ax)
+    return P(*spec)
+
+
+def shard_ann(x, logical: Sequence[Optional[str]]):
+    """Annotate an activation with a sharding constraint (no-op w/o mesh)."""
+    st = getattr(_ctx, "state", None)
+    if st is None:
+        return x
+    mesh, rules = st
+    if x.ndim != len(logical):
+        return x
+    spec = _axes_to_spec(logical, x.shape, mesh, rules)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+# ---------------------------------------------------------------------------
+# Param logical axes by path pattern
+# ---------------------------------------------------------------------------
+# Matched in order against jax.tree_util.keystr paths; first hit wins.
+# Leading "layers" axis is added automatically for scan-stacked leaves.
+
+_PARAM_PATTERNS: list[tuple[str, tuple]] = [
+    (r"embedding",                ("vocab", "embed")),
+    (r"head",                     ("embed", "vocab")),
+    (r"\bwq\b|'wq'",              ("embed", "heads", "head_dim")),
+    (r"'wk'|'wv'",                ("embed", "kv_heads", "head_dim")),
+    (r"'wo'",                     ("heads", "head_dim", "embed")),
+    (r"'wi'|'wg'",                ("embed", "mlp")),
+    (r"'w_down'",                 ("mlp", "embed")),
+    (r"router",                   ("embed", "experts")),
+    (r"experts.*'wi'|'ewi'|'ewg'", ("experts", "embed", "mlp")),
+    (r"'ewo'",                    ("experts", "mlp", "embed")),
+    (r"conv1d",                   ("conv", "lru")),
+    (r"lru_in|lru_gate",          ("embed", "lru")),
+    (r"lru_out",                  ("lru", "embed")),
+    (r"rwkv_(r|k|v|g)",           ("embed", "embed2")),
+    (r"rwkv_o",                   ("embed2", "embed")),
+    (r"cm_(k)",                   ("embed", "mlp")),
+    (r"cm_(v)",                   ("mlp", "embed")),
+    (r"cm_(r)",                   ("embed", "embed2")),
+    (r"lora_(a|b)",               ("lora", "lora")),
+]
+
+# 'embed2' lets square (d, d) matrices shard their *output* dim over model
+PARAM_RULES["embed2"] = "model"
+
+
+def _leaf_axes(path: str, leaf) -> tuple:
+    for pat, axes in _PARAM_PATTERNS:
+        if re.search(pat, path):
+            if len(axes) == leaf.ndim:
+                return axes
+            if len(axes) == leaf.ndim - 1:
+                return ("layers",) + axes      # scan-stacked
+    # vectors / scalars / unknowns: replicate
+    return tuple([None] * leaf.ndim)
+
+
+def param_logical_axes(params) -> Any:
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    axes = [_leaf_axes(jax.tree_util.keystr(p), l) for p, l in flat]
+    return jax.tree_util.tree_unflatten(treedef, axes)
+
+
+def param_shardings(params, mesh: Mesh, rules: Optional[dict] = None):
+    """NamedSharding pytree for params (or any state with param-like paths)."""
+    rules = rules or PARAM_RULES
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    out = []
+    for path, leaf in flat:
+        axes = _leaf_axes(jax.tree_util.keystr(path), leaf)
+        spec = _axes_to_spec(axes, leaf.shape, mesh, rules)
+        out.append(NamedSharding(mesh, spec))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def activation_sharding(mesh: Mesh, logical: Sequence[Optional[str]], shape):
+    return NamedSharding(mesh, _axes_to_spec(logical, shape, mesh, ACT_RULES))
+
+
+# ---------------------------------------------------------------------------
+# Decode-cache logical axes by path pattern
+# ---------------------------------------------------------------------------
+
+_CACHE_PATTERNS: list[tuple[str, tuple]] = [
+    (r"'k_scale'|'v_scale'",
+     ("batch", "cache_seq", "kv_heads", "head_dim")),
+    (r"'k'|'v'",   ("batch", "cache_seq", "kv_heads", "head_dim")),
+    (r"'S'",       ("batch", "rwkv_heads", "head_dim", "head_dim2")),
+    (r"'shift'",   ("batch", "embed")),
+    (r"'h'",       ("batch", "lru")),
+    (r"'conv'",    ("batch", "conv", "lru")),
+]
+
+
+def _cache_leaf_axes(path: str, leaf) -> tuple:
+    for pat, axes in _CACHE_PATTERNS:
+        if re.search(pat, path):
+            if len(axes) == leaf.ndim:
+                return axes
+            if len(axes) == leaf.ndim - 1:
+                return ("layers",) + axes       # scan-stacked
+    return tuple([None] * leaf.ndim)
+
+
+def cache_shardings(cache, mesh: Mesh):
+    rules = dict(ACT_RULES)
+    rules.update({"layers": None, "head_dim2": None})
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache)
+    out = []
+    for path, leaf in flat:
+        axes = _cache_leaf_axes(jax.tree_util.keystr(path), leaf)
+        out.append(NamedSharding(mesh, _axes_to_spec(axes, leaf.shape, mesh,
+                                                     rules)))
+    return jax.tree_util.tree_unflatten(treedef, out)

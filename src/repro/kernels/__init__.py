@@ -1,0 +1,3 @@
+# Pallas TPU kernels for the paper's compute hot spots:
+#   bsr_spmm  - dense x BlockCSR gather-block-matmul (paper Figs. 2-3)
+#   prox_adam - fused optimizer + soft-threshold update (paper Fig. 4)

@@ -1,0 +1,14 @@
+"""Pure-jnp oracle for the SDDMM block-gradient kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def sddmm_block_grad_ref(dy, x, slot_rows, slot_cols, n_slots, br, bc):
+    """Dense dW = dY^T X, then gather the blocks at the slot coordinates."""
+    dw = dy.astype(jnp.float32).T @ x.astype(jnp.float32)   # (N, K)
+    out = []
+    for s in range(n_slots):
+        r, c = int(slot_rows[s]), int(slot_cols[s])
+        out.append(dw[r * br:(r + 1) * br, c * bc:(c + 1) * bc])
+    return jnp.stack(out)

@@ -1,0 +1,39 @@
+"""Pure-jnp oracle for the BCSR gather-block-matmul kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.sparse.formats import BlockCSR, bcsr_to_dense
+
+
+def spmm_fwd_ref(x, w: BlockCSR):
+    """Y = X @ W' with W (N, K) sparse — paper's dense x compressed'."""
+    wd = bcsr_to_dense(w)[: w.shape[0], : w.shape[1]]
+    return x.astype(jnp.float32) @ wd.astype(jnp.float32).T
+
+
+def spmm_bwd_ref(dy, w: BlockCSR):
+    """dX = dY @ W — paper's dense x compressed."""
+    wd = bcsr_to_dense(w)[: w.shape[0], : w.shape[1]]
+    return dy.astype(jnp.float32) @ wd.astype(jnp.float32)
+
+
+def gather_block_matmul_ref(dense, data, idx, blk, nnz, *, out_cols,
+                            transpose_block):
+    """Direct oracle of the gather-matmul-accumulate schedule itself."""
+    n_slots, br, bc = data.shape
+    O, jmax = idx.shape
+    b_in, b_out = (bc, br) if transpose_block else (br, bc)
+    M = dense.shape[0]
+    out = jnp.zeros((M, out_cols), jnp.float32)
+    d32 = dense.astype(jnp.float32)
+    for o in range(O):
+        acc = jnp.zeros((M, b_out), jnp.float32)
+        for j in range(jmax):
+            w = data[blk[o, j]].astype(jnp.float32)
+            if transpose_block:
+                w = w.T
+            contrib = d32[:, idx[o, j] * b_in:(idx[o, j] + 1) * b_in] @ w
+            acc = acc + jnp.where(j < nnz[o], 1.0, 0.0) * contrib
+        out = out.at[:, o * b_out:(o + 1) * b_out].set(acc)
+    return out

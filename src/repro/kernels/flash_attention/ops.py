@@ -1,0 +1,41 @@
+"""Jit'd wrapper: model-layout flash attention with jnp backward.
+
+Forward runs the Pallas kernel (interpret mode on CPU; Mosaic on TPU); the
+custom VJP recomputes attention with the streaming-jnp formulation for
+backward (flash-style recompute — no stored probabilities). Model code
+selects this backend via attention.ATTN_BACKEND = 'pallas' (TPU serving /
+prefill path); the CPU dry-run keeps the jnp path so the artifact compiles.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.flash_attention import flash_attention_fwd
+from repro.kernels.flash_attention import ref as ref_lib
+
+_INTERPRET = True   # CPU container default
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("causal", "window", "bq", "bk",
+                                    "interpret"))
+def flash_attention(q, k, v, *, causal=True, window=None, bq=128, bk=128,
+                    interpret=None):
+    """q: (B, S, H, hd); k, v: (B, S, KV, hd) -> (B, S, H, hd)."""
+    interpret = _INTERPRET if interpret is None else interpret
+    b, s, h, hd = q.shape
+    kv = k.shape[2]
+    bq = min(bq, s)
+    bk = min(bk, s)
+    qf = q.transpose(0, 2, 1, 3).reshape(b * h, s, hd)
+    kf = k.transpose(0, 2, 1, 3).reshape(b * kv, s, hd)
+    vf = v.transpose(0, 2, 1, 3).reshape(b * kv, s, hd)
+    of = flash_attention_fwd(qf, kf, vf, causal=causal, window=window,
+                             bq=bq, bk=bk, interpret=interpret)
+    return of.reshape(b, h, s, hd).transpose(0, 2, 1, 3)
+
+
+flash_attention_ref = ref_lib.flash_attention_ref

@@ -1,0 +1,26 @@
+"""Pure-jnp oracle for the flash-attention kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=None):
+    """q: (BH, S, hd); k, v: (BKV, S, hd). Naive masked softmax attention."""
+    bh, s, hd = q.shape
+    g = bh // k.shape[0]
+    kk = jnp.repeat(k, g, axis=0)
+    vv = jnp.repeat(v, g, axis=0)
+    scores = jnp.einsum("hqd,hkd->hqk", q.astype(jnp.float32),
+                        kk.astype(jnp.float32)) * hd ** -0.5
+    qp = jnp.arange(s)[:, None]
+    kp = jnp.arange(s)[None, :]
+    mask = jnp.ones((s, s), bool)
+    if causal:
+        mask &= qp >= kp
+    if window is not None:
+        mask &= (qp - kp) < window
+    scores = jnp.where(mask, scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("hqk,hkd->hqd", p, vv.astype(jnp.float32)
+                      ).astype(q.dtype)

@@ -1,0 +1,26 @@
+"""Pure-jnp oracle for the fused Prox-ADAM/Prox-RMSProp kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def fused_prox_update_ref(w, g, m, v, scalars, *, rule="adam",
+                          apply_prox=True):
+    lr, lam, b1, b2, eps, bc1, bc2 = [scalars[i] for i in range(7)]
+    g32 = g.astype(jnp.float32)
+    w32 = w.astype(jnp.float32)
+    if rule == "adam":
+        m2 = b1 * m + (1.0 - b1) * g32
+        v2 = b2 * v + (1.0 - b2) * g32 * g32
+        d = (m2 / bc1) / (jnp.sqrt(v2 / bc2) + eps)
+    elif rule == "rmsprop":
+        m2 = m
+        v2 = b2 * v + (1.0 - b2) * g32 * g32
+        d = g32 / (jnp.sqrt(v2) + eps)
+    else:
+        raise ValueError(rule)
+    z = w32 - lr * d
+    if apply_prox:
+        tau = lr * lam
+        z = jnp.minimum(jnp.maximum(z - tau, 0.0), z + tau)
+    return z.astype(w.dtype), m2, v2

@@ -1,0 +1,239 @@
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+Proves the distribution config is coherent without hardware: for each cell,
+``jax.jit(step, in_shardings, out_shardings).lower(**specs).compile()`` must
+succeed on the 256-chip single-pod mesh AND the 512-chip 2-pod mesh, and we
+extract memory_analysis / cost_analysis / trip-count-corrected HLO costs
+(roofline terms) from the compiled artifact.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch all --shape all \
+        --mesh single,multi --out experiments/dryrun
+
+Results cache to one JSON per cell; re-runs skip completed cells.
+"""
+# The VERY FIRST lines — before ANY other import, jax locks device count on
+# first init:
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_FLAGS", ""))
+
+import argparse          # noqa: E402
+import json              # noqa: E402
+import time              # noqa: E402
+import traceback         # noqa: E402
+
+import jax               # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.configs import ARCH_IDS, get_config, shapes_for  # noqa: E402
+from repro.configs.base import SHAPES  # noqa: E402
+from repro.core.optimizers import prox_adam  # noqa: E402
+from repro.distributed import sharding as shd  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.models.model_zoo import build, input_specs  # noqa: E402
+from repro.roofline import analysis  # noqa: E402
+from repro.serve.step import make_prefill_step  # noqa: E402
+from repro.train.state import TrainState  # noqa: E402
+from repro.train.step import make_train_step  # noqa: E402
+
+# Layer-stack residual budget. Empirically calibrated on the 104B cell: the
+# true per-device footprint is ~5x the bf16 carry-stack estimate (f32
+# convert-hoist + transposed copies + attention working set; see
+# EXPERIMENTS.md §Perf C-iterations), so the model-estimate budget is set to
+# 1.5 GiB to land the real footprint under the 16 GB v5e HBM.
+_RESIDUAL_BUDGET = int(0.75 * 1024 ** 3)
+_LOSS_SEQ_CHUNK = 512                       # head/loss computed per seq chunk
+
+
+def _train_microbatches(cfg, shape, chips: int, dp: int,
+                        tp: int = 16) -> int:
+    """Grad-accumulation depth from the layer-stack activation-residual
+    footprint: with remat_policy='nothing' the scan saves one bf16 carry
+    per layer, so residual/device = n_layers * B*S*d*2 / (mb*dp). Pick the
+    smallest power-of-two mb that fits the budget. HARD CAP: per-microbatch
+    batch stays divisible by the data-parallel degree, else activations
+    replicate across 'data' (the 197 GB/device baseline failure mode;
+    §Perf iteration C1)."""
+    # the carry is seq-sharded over TP except for RWKV (exempt from the
+    # sequence-parallel residual stream; see models/transformer.py)
+    tp_eff = tp if "rwkv" not in cfg.block_pattern else 1
+    stack = (cfg.n_layers * shape.global_batch * shape.seq_len
+             * cfg.d_model * 2 / dp / tp_eff)
+    if cfg.moe is not None:
+        # MoE dispatch residuals (top-k routed token copies) dominate the
+        # carry for expert models (measured on olmoe; §Perf B-iterations)
+        stack *= 1 + min(cfg.moe.top_k, 8)
+    mb = 1
+    while stack / mb > _RESIDUAL_BUDGET and mb < shape.global_batch:
+        mb *= 2
+    return max(1, min(mb, shape.global_batch // dp))
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool,
+               q_chunk: int = 1024, kv_chunk: int = 1024):
+    """Build + lower + compile one cell. Returns (compiled, meta)."""
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.devices.size
+    model = build(cfg)
+    specs = input_specs(cfg, shape)
+    rng = jax.random.PRNGKey(0)
+
+    meta = {"arch": arch, "shape": shape_name,
+            "mesh": "multi" if multi_pod else "single", "chips": chips}
+
+    with shd.use_mesh(mesh):
+        if shape.kind == "train":
+            opt = prox_adam(1e-4, lam=1e-5)
+            dp = (mesh.shape.get("pod", 1)) * mesh.shape["data"]
+            mb = _train_microbatches(cfg, shape, chips, dp,
+                                     tp=mesh.shape["model"])
+            meta["microbatches"] = mb
+            step = make_train_step(model, opt, microbatches=mb,
+                                   loss_seq_chunk=_LOSS_SEQ_CHUNK)
+            state_spec = jax.eval_shape(
+                lambda: TrainState.create(model.init(rng), opt))
+            state_shd = shd.param_shardings(state_spec, mesh)
+            batch_shd = {
+                "inputs": shd.activation_sharding(
+                    mesh, ("batch", "seq", "embed")[:len(specs["inputs"].shape)],
+                    specs["inputs"].shape),
+                "labels": shd.activation_sharding(
+                    mesh, ("batch", "seq"), specs["labels"].shape),
+            }
+            jitted = jax.jit(step, in_shardings=(state_shd, batch_shd),
+                             out_shardings=(state_shd, None),
+                             donate_argnums=(0,))
+            lowered = jitted.lower(state_spec, specs)
+        elif shape.kind == "prefill":
+            step = make_prefill_step(model)
+            params_spec = jax.eval_shape(model.init, rng)
+            params_shd = shd.param_shardings(params_spec, mesh)
+            batch_shd = {
+                "inputs": shd.activation_sharding(
+                    mesh, ("batch", "seq", "embed")[:len(specs["inputs"].shape)],
+                    specs["inputs"].shape),
+            }
+            jitted = jax.jit(step, in_shardings=(params_shd, batch_shd),
+                             out_shardings=None)
+            lowered = jitted.lower(params_spec,
+                                   {"inputs": specs["inputs"]})
+        else:  # decode
+            params_spec = jax.eval_shape(model.init, rng)
+            params_shd = shd.param_shardings(params_spec, mesh)
+            cache_spec = jax.eval_shape(
+                lambda: model.init_cache(shape.global_batch, shape.seq_len))
+            cache_shd = shd.cache_shardings(cache_spec, mesh)
+            tok_shd = shd.activation_sharding(
+                mesh, ("batch", "seq", "embed")[:len(specs["inputs"].shape)],
+                specs["inputs"].shape)
+
+            def serve_step(params, inputs, cache, pos):
+                return model.decode_step(params, inputs, cache, pos)
+
+            jitted = jax.jit(
+                serve_step,
+                in_shardings=(params_shd, tok_shd, cache_shd, None),
+                out_shardings=(None, cache_shd),
+                donate_argnums=(2,))
+            pos_spec = jax.ShapeDtypeStruct((), jnp.int32)
+            lowered = jitted.lower(params_spec, specs["inputs"], cache_spec,
+                                   pos_spec)
+
+        compiled = lowered.compile()
+    return compiled, cfg, shape, meta
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, outdir: str,
+             force: bool = False) -> dict:
+    mesh_name = "multi" if multi_pod else "single"
+    cell_id = f"{arch}__{shape_name}__{mesh_name}"
+    path = os.path.join(outdir, cell_id + ".json")
+    if os.path.exists(path) and not force:
+        with open(path) as f:
+            return json.load(f)
+
+    t0 = time.time()
+    try:
+        compiled, cfg, shape, meta = lower_cell(arch, shape_name, multi_pod)
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        roof = analysis.analyze(compiled.as_text(), cfg, shape,
+                                mesh_name, meta["chips"],
+                                xla_cost=cost, memory_stats=mem)
+        result = {
+            "ok": True, "cell": cell_id, **meta,
+            "compile_s": time.time() - t0,
+            "memory": {
+                "argument_bytes": mem.argument_size_in_bytes,
+                "output_bytes": mem.output_size_in_bytes,
+                "temp_bytes": mem.temp_size_in_bytes,
+                "alias_bytes": mem.alias_size_in_bytes,
+                "peak_per_device_gb": (mem.argument_size_in_bytes
+                                       + mem.temp_size_in_bytes
+                                       + mem.output_size_in_bytes
+                                       - mem.alias_size_in_bytes) / 2**30,
+            },
+            "roofline": roof.as_dict(),
+        }
+        try:
+            from repro.roofline.flash_adjust import flash_adjusted
+            adj = flash_adjusted(result, cfg, shape)
+            if adj is not None:
+                result["roofline_flash"] = adj
+        except Exception as e:  # noqa: BLE001 — adjustment is best-effort
+            result["roofline_flash_error"] = f"{type(e).__name__}: {e}"
+        print(f"[ok]   {cell_id:56s} compile={result['compile_s']:7.1f}s "
+              f"mem/dev={result['memory']['peak_per_device_gb']:6.2f}GB "
+              f"dominant={roof.dominant}")
+    except Exception as e:  # noqa: BLE001 — record the failure, keep sweeping
+        result = {"ok": False, "cell": cell_id, "arch": arch,
+                  "shape": shape_name, "mesh": mesh_name,
+                  "error": f"{type(e).__name__}: {e}",
+                  "traceback": traceback.format_exc()[-4000:],
+                  "compile_s": time.time() - t0}
+        print(f"[FAIL] {cell_id}: {result['error']}")
+
+    os.makedirs(outdir, exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(result, f, indent=1)
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="single,multi")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    archs = ARCH_IDS if args.arch == "all" else args.arch.split(",")
+    meshes = args.mesh.split(",")
+    results = []
+    for arch in archs:
+        cfg = get_config(arch)
+        cell_shapes = shapes_for(cfg) if args.shape == "all" \
+            else args.shape.split(",")
+        for shape_name in cell_shapes:
+            if shape_name == "long_500k" and not cfg.sub_quadratic:
+                print(f"[skip] {arch}__long_500k: full attention is "
+                      "quadratic at 524k (DESIGN.md §6)")
+                continue
+            for mesh_name in meshes:
+                results.append(run_cell(arch, shape_name,
+                                        mesh_name == "multi", args.out,
+                                        args.force))
+    ok = sum(1 for r in results if r.get("ok"))
+    print(f"\n{ok}/{len(results)} cells compiled")
+    rows = [r["roofline"] for r in results
+            if r.get("ok") and r["mesh"] == "single"]
+    if rows:
+        print("\nSingle-pod roofline table:\n" + analysis.format_table(rows))
+
+
+if __name__ == "__main__":
+    main()

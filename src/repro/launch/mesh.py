@@ -1,0 +1,36 @@
+"""Production mesh construction.
+
+A FUNCTION, not a module-level constant: importing this module never touches
+jax device state (required so smoke tests / benches see 1 CPU device while
+only the dry-run forces 512 placeholder devices).
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: (data=16, model=16) = 256 chips.
+    Multi-pod:  (pod=2, data=16, model=16) = 512 chips."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = int(np.prod(shape))
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(
+            f"mesh {shape} needs {n} devices but only {len(devices)} present; "
+            "the dry-run entrypoint must set "
+            "XLA_FLAGS=--xla_force_host_platform_device_count=512 before any "
+            "jax import (see launch/dryrun.py)")
+    return jax.make_mesh(
+        shape, axes, devices=devices[:n],
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh(data: int = 1, model: int = 1):
+    """Small mesh over whatever devices exist (tests)."""
+    n = data * model
+    return jax.make_mesh(
+        (data, model), ("data", "model"), devices=jax.devices()[:n],
+        axis_types=(jax.sharding.AxisType.Auto,) * 2)

@@ -1,0 +1,260 @@
+"""GQA attention with chunked (flash-style) streaming softmax, QK-norm,
+sliding windows, RoPE, and a ring-buffer KV cache for decode.
+
+The training/prefill path never materializes the (S, S) score matrix: it
+streams over KV chunks with a running (max, sum, acc) — the pure-JAX flash
+formulation. On TPU the same structure is what a Pallas flash kernel would
+compute; keeping it in jnp lets XLA partition it with GSPMD and keeps the
+dry-run honest about memory (see EXPERIMENTS.md §Perf for the block-skip
+iteration).
+
+Decode attention is a single-token product against the cache; for long
+contexts the cache's sequence axis is sharded over the 'model' mesh axis
+(sequence-parallel decode — softmax reductions become cross-chip collectives).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import shard_ann
+from repro.models.layers import apply_norm, apply_rope, init_norm, truncated_normal_init
+
+Array = jax.Array
+NEG_INF = -1e30
+
+
+def init_attention(key, cfg: ModelConfig) -> dict:
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": truncated_normal_init(ks[0], (d, h, hd), 1.0),
+        "wk": truncated_normal_init(ks[1], (d, kv, hd), 1.0),
+        "wv": truncated_normal_init(ks[2], (d, kv, hd), 1.0),
+        "wo": truncated_normal_init(ks[3], (h, hd, d), 1.0),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = init_norm(hd, "rmsnorm")
+        p["k_norm"] = init_norm(hd, "rmsnorm")
+    return p
+
+
+def _project_qkv(p: dict, x: Array, cfg: ModelConfig, positions: Array):
+    dt = x.dtype
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(dt))
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(dt))
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(dt))
+    if cfg.qk_norm:
+        q = apply_norm(p["q_norm"], q, "rmsnorm")
+        k = apply_norm(p["k_norm"], k, "rmsnorm")
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    # 'seq_fb' is a FALLBACK axis: it claims 'model' only when the head
+    # count doesn't divide the mesh axis (e.g. smollm's 15 heads), turning
+    # 16x-replicated attention into sequence-sharded attention (§Perf A1)
+    q = shard_ann(q, ("batch", "seq_fb", "heads", "head_dim"))
+    k = shard_ann(k, ("batch", "seq", "kv_heads", "head_dim"))
+    v = shard_ann(v, ("batch", "seq", "kv_heads", "head_dim"))
+    return q, k, v
+
+
+def chunked_attention(q: Array, k: Array, v: Array, *,
+                      causal: bool = True,
+                      window: Optional[int] = None,
+                      q_chunk: int = 1024,
+                      kv_chunk: int = 1024,
+                      q_offset: int = 0,
+                      seq_shard_fallback: bool = False) -> Array:
+    """Streaming-softmax attention.
+
+    q: (B, Sq, H, hd); k, v: (B, Skv, KV, hd) with H a multiple of KV (GQA).
+    Returns (B, Sq, H, hd). Never materializes (Sq, Skv).
+    """
+    b, sq, h, hd = q.shape
+    skv, kv = k.shape[1], k.shape[2]
+    g = h // kv
+    scale = hd ** -0.5
+    q_chunk = min(q_chunk, sq)
+    kv_chunk = min(kv_chunk, skv)
+    nq, nkv = sq // q_chunk, skv // kv_chunk
+    assert sq % q_chunk == 0 and skv % kv_chunk == 0
+
+    qg = q.reshape(b, nq, q_chunk, kv, g, hd)
+    kg = k.reshape(b, nkv, kv_chunk, kv, hd)
+    vg = v.reshape(b, nkv, kv_chunk, kv, hd)
+    # q-dim sharding of the streaming softmax (scores/probs/acc get the
+    # same q-sharding by propagation): the zero-communication layout when
+    # heads can't shard — each device owns a q-token slice vs all KV.
+    # ONLY applied on the fallback path: for heads-shardable archs this
+    # constraint conflicts with the (kv x g) head tiling GSPMD derives from
+    # the projections and forces a per-layer reshard storm (measured on
+    # qwen3/command-r; EXPERIMENTS.md §Perf A-iterations).
+    if seq_shard_fallback:
+        qg = shard_ann(qg, ("batch", None, "seq_fb", "kv_heads", None,
+                            "head_dim"))
+
+    q_pos = (jnp.arange(sq) + q_offset).reshape(nq, q_chunk)
+    k_pos = jnp.arange(skv).reshape(nkv, kv_chunk)
+
+    def one_q_chunk(args):
+        qc, qp = args                      # (b, q_chunk, kv, g, hd), (q_chunk,)
+
+        def kv_step_inner(carry, xs):
+            m, l, acc = carry
+            kc, vc, kp = xs                # (b, kv_chunk, kv, hd), ..., (kv_chunk,)
+            s = jnp.einsum("bqkgh,bckh->bkgqc", qc, kc,
+                           preferred_element_type=jnp.float32) * scale
+            mask = jnp.ones((q_chunk, kv_chunk), bool)
+            if causal:
+                mask &= qp[:, None] >= kp[None, :]
+            if window is not None:
+                mask &= (qp[:, None] - kp[None, :]) < window
+            s = jnp.where(mask, s, NEG_INF)
+            m2 = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m2[..., None])
+            corr = jnp.exp(m - m2)
+            l2 = corr * l + jnp.sum(p, axis=-1)
+            acc2 = corr[..., None] * acc + jnp.einsum(
+                "bkgqc,bckh->bkgqh", p, vc.astype(jnp.float32),
+                preferred_element_type=jnp.float32)
+            return (m2, l2, acc2), None
+
+        # flash-attention memory semantics: remat the kv-chunk body so the
+        # (q_chunk, kv_chunk) score/prob tiles are NOT stacked as scan
+        # residuals for backward — they are recomputed per chunk. Without
+        # this, backward materializes the full (S, S) probabilities
+        # (measured: ~9 GB/device residuals at 4k train; see EXPERIMENTS.md).
+        kv_step = jax.checkpoint(
+            kv_step_inner, policy=jax.checkpoint_policies.nothing_saveable)
+        m0 = jnp.full((b, kv, g, q_chunk), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, kv, g, q_chunk), jnp.float32)
+        a0 = jnp.zeros((b, kv, g, q_chunk, hd), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0),
+            (kg.transpose(1, 0, 2, 3, 4), vg.transpose(1, 0, 2, 3, 4), k_pos))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return out.transpose(0, 3, 1, 2, 4)  # (b, q_chunk, kv, g, hd)
+
+    outs = jax.lax.map(one_q_chunk, (qg.transpose(1, 0, 2, 3, 4, 5), q_pos))
+    out = outs.transpose(1, 0, 2, 3, 4, 5).reshape(b, sq, h, hd)
+    return out.astype(q.dtype)
+
+
+def _heads_shardable(cfg: ModelConfig) -> bool:
+    from repro.distributed.sharding import current_mesh
+    mesh = current_mesh()
+    if mesh is None or "model" not in mesh.shape:
+        return True
+    return cfg.n_heads % mesh.shape["model"] == 0
+
+
+def apply_attention(p: dict, x: Array, cfg: ModelConfig,
+                    positions: Array) -> Array:
+    """Training / prefill self-attention over a full sequence."""
+    # under the seq-parallel residual stream, attention is the only block
+    # needing cross-token data: materialize full-seq ONCE here (one gather
+    # per layer instead of GSPMD re-gathering at every projection). When
+    # the head count cannot shard (seq_fb path), projections stay
+    # seq-sharded and only K/V (a few heads) are gathered — skip the pin.
+    shardable = _heads_shardable(cfg)
+    if shardable:
+        x = shard_ann(x, ("batch", "seq", "embed"))
+    q, k, v = _project_qkv(p, x, cfg, positions)
+    out = chunked_attention(q, k, v, causal=True, window=cfg.attn_window,
+                            seq_shard_fallback=not shardable)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
+    return shard_ann(y, ("batch", "seq", "embed"))
+
+
+# ---------------------------------------------------------------------------
+# Decode (single new token against a KV cache)
+# ---------------------------------------------------------------------------
+
+def init_kv_cache(cfg: ModelConfig, batch: int, seq_len: int, dtype) -> dict:
+    """Ring-buffer cache: window-bounded for local attention.
+
+    kv_cache_dtype='int8': k/v stored int8 with one f32 scale per
+    (batch, slot, head) — halves cache HBM vs bf16 (the lever that brings
+    the 104B 32k-decode cell under 16 GB/device on the single pod)."""
+    size = seq_len if cfg.attn_window is None else min(cfg.attn_window, seq_len)
+    kv, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+    if cfg.kv_cache_dtype == "int8":
+        return {
+            "k": jnp.zeros((batch, size, kv, hd), jnp.int8),
+            "v": jnp.zeros((batch, size, kv, hd), jnp.int8),
+            "k_scale": jnp.zeros((batch, size, kv, 1), jnp.float32),
+            "v_scale": jnp.zeros((batch, size, kv, 1), jnp.float32),
+        }
+    return {
+        "k": jnp.zeros((batch, size, kv, hd), dtype),
+        "v": jnp.zeros((batch, size, kv, hd), dtype),
+    }
+
+
+def _quantize_heads(x: Array):
+    """Per-(batch, pos, head) symmetric int8 quantization."""
+    scale = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1,
+                    keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127)
+    return q.astype(jnp.int8), scale
+
+
+def decode_attention(p: dict, x: Array, cache: dict, pos: Array,
+                     cfg: ModelConfig) -> tuple[Array, dict]:
+    """x: (B, 1, d); pos: scalar int32 position of the new token."""
+    b = x.shape[0]
+    positions = jnp.full((b, 1), pos, jnp.int32)
+    q, k_new, v_new = _project_qkv(p, x, cfg, positions)
+
+    size = cache["k"].shape[1]
+    slot = pos % size
+    new_cache = {}
+    if cfg.kv_cache_dtype == "int8":
+        kq, ks = _quantize_heads(k_new)
+        vq, vs = _quantize_heads(v_new)
+        upd = jax.lax.dynamic_update_slice
+        new_cache["k"] = upd(cache["k"], kq, (0, slot, 0, 0))
+        new_cache["v"] = upd(cache["v"], vq, (0, slot, 0, 0))
+        new_cache["k_scale"] = upd(cache["k_scale"], ks, (0, slot, 0, 0))
+        new_cache["v_scale"] = upd(cache["v_scale"], vs, (0, slot, 0, 0))
+        k = (new_cache["k"].astype(jnp.float32) * new_cache["k_scale"]
+             ).astype(x.dtype)
+        v = (new_cache["v"].astype(jnp.float32) * new_cache["v_scale"]
+             ).astype(x.dtype)
+    else:
+        new_cache["k"] = jax.lax.dynamic_update_slice(
+            cache["k"], k_new.astype(cache["k"].dtype), (0, slot, 0, 0))
+        new_cache["v"] = jax.lax.dynamic_update_slice(
+            cache["v"], v_new.astype(cache["v"].dtype), (0, slot, 0, 0))
+        k, v = new_cache["k"], new_cache["v"]
+    k = shard_ann(k, ("batch", "cache_seq", "kv_heads", "head_dim"))
+    v = shard_ann(v, ("batch", "cache_seq", "kv_heads", "head_dim"))
+
+    h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    g = h // kv
+    qg = q.reshape(b, kv, g, hd)
+    s = jnp.einsum("bkgh,bckh->bkgc", qg, k,
+                   preferred_element_type=jnp.float32) * hd ** -0.5
+
+    # validity of each ring slot at time `pos`
+    idx = jnp.arange(size)
+    written = jnp.where(pos + 1 >= size, size, pos + 1)
+    valid = idx < written
+    if cfg.attn_window is not None:
+        # ring semantics: every surviving slot is within the window by
+        # construction once the ring has wrapped
+        age = (slot - idx) % size
+        valid &= age < cfg.attn_window
+    s = jnp.where(valid[None, None, None, :], s, NEG_INF)
+
+    pattn = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgc,bckh->bkgh", pattn, v.astype(jnp.float32),
+                     preferred_element_type=jnp.float32)
+    out = out.reshape(b, 1, h, hd).astype(x.dtype)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
+    return shard_ann(y, ("batch", "seq", "embed")), new_cache

@@ -1,0 +1,210 @@
+"""The paper's four experiment networks (paper §4): LeNet-5 (MNIST) and
+AlexNet / VGG16 / ResNet-32 (CIFAR-10), reconstructed so layer-wise parameter
+counts match the paper's Tables A1-A4 exactly:
+
+  lenet5:   conv1 500, conv2 25,000, fc1 400,000, fc2 5,000   (total 430,500)
+  alexnet:  grouped convs (groups=2 on conv2/4/5) -> 7,558,176 weights
+  vgg16:    13 convs + fc 512->1024->1024->10      -> 16,293,568 weights
+  resnet32: 16/32/64 stages, 1x1 projections        ->    464,432 weights
+
+Functional init/apply pairs; weights-only counts (biases excluded from
+compression, as in the paper). Convolutions use lax.conv_general_dilated in
+NHWC; the sparse serving path reshapes filters to (C_out, C_in*kh*kw) BCSR.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import truncated_normal_init
+
+Array = jax.Array
+
+
+def conv_init(key, kh, kw, cin, cout, groups=1):
+    # HWIO layout; He init (paper uses He et al. 2015)
+    return truncated_normal_init(key, (kh, kw, cin // groups, cout), 2.0)
+
+
+def conv(x, w, stride=1, padding="SAME", groups=1):
+    return jax.lax.conv_general_dilated(
+        x, w, (stride, stride), padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        feature_group_count=groups)
+
+
+def maxpool(x, k=2, s=2):
+    return jax.lax.reduce_window(x, -jnp.inf, jax.lax.max,
+                                 (1, k, k, 1), (1, s, s, 1), "VALID")
+
+
+def avgpool_global(x):
+    return jnp.mean(x, axis=(1, 2))
+
+
+@dataclasses.dataclass(frozen=True)
+class CNNModel:
+    name: str
+    input_shape: tuple
+    n_classes: int
+    init: Callable
+    apply: Callable
+
+
+# ---------------------------------------------------------------------------
+# LeNet-5 (Caffe variant; paper Table A1)
+# ---------------------------------------------------------------------------
+
+def _lenet_init(key):
+    ks = jax.random.split(key, 4)
+    return {
+        "conv1": {"w": conv_init(ks[0], 5, 5, 1, 20)},      # 500
+        "conv2": {"w": conv_init(ks[1], 5, 5, 20, 50)},     # 25,000
+        "fc1": {"w": truncated_normal_init(ks[2], (800, 500), 2.0),
+                "bias": jnp.zeros((500,))},                  # 400,000
+        "fc2": {"w": truncated_normal_init(ks[3], (500, 10), 2.0),
+                "bias": jnp.zeros((10,))},                   # 5,000
+    }
+
+
+def _lenet_apply(p, x):
+    x = maxpool(conv(x, p["conv1"]["w"], padding="VALID"))   # 28->24->12
+    x = maxpool(conv(x, p["conv2"]["w"], padding="VALID"))   # 12->8->4
+    x = x.reshape(x.shape[0], -1)                            # 4*4*50 = 800
+    x = jax.nn.relu(x @ p["fc1"]["w"] + p["fc1"]["bias"])
+    return x @ p["fc2"]["w"] + p["fc2"]["bias"]
+
+
+# ---------------------------------------------------------------------------
+# AlexNet-CIFAR (grouped convs; paper Table A2)
+# ---------------------------------------------------------------------------
+
+_ALEX = [  # (k, cin, cout, groups, pool)
+    (5, 3, 96, 1, True),       # conv1   7,200
+    (5, 96, 256, 2, True),     # conv2 307,200
+    (3, 256, 384, 1, False),   # conv3 884,736
+    (3, 384, 384, 2, False),   # conv4 663,552
+    (3, 384, 256, 2, True),    # conv5 442,368
+]
+
+
+def _alex_init(key):
+    ks = jax.random.split(key, 8)
+    p = {}
+    for i, (k, cin, cout, g, _) in enumerate(_ALEX):
+        p[f"conv{i+1}"] = {"w": conv_init(ks[i], k, k, cin, cout, g)}
+    p["fc1"] = {"w": truncated_normal_init(ks[5], (4096, 1024), 2.0),
+                "bias": jnp.zeros((1024,))}                  # 4,194,304
+    p["fc2"] = {"w": truncated_normal_init(ks[6], (1024, 1024), 2.0),
+                "bias": jnp.zeros((1024,))}                  # 1,048,576
+    p["fc3"] = {"w": truncated_normal_init(ks[7], (1024, 10), 2.0),
+                "bias": jnp.zeros((10,))}                    # 10,240
+    return p
+
+
+def _alex_apply(p, x):
+    for i, (k, cin, cout, g, pool) in enumerate(_ALEX):
+        x = jax.nn.relu(conv(x, p[f"conv{i+1}"]["w"], groups=g))
+        if pool:
+            x = maxpool(x)                                   # 32->16->8->4
+    x = x.reshape(x.shape[0], -1)                            # 4*4*256 = 4096
+    x = jax.nn.relu(x @ p["fc1"]["w"] + p["fc1"]["bias"])
+    x = jax.nn.relu(x @ p["fc2"]["w"] + p["fc2"]["bias"])
+    return x @ p["fc3"]["w"] + p["fc3"]["bias"]
+
+
+# ---------------------------------------------------------------------------
+# VGG16-CIFAR (paper Table A3)
+# ---------------------------------------------------------------------------
+
+_VGG = [(64, 2), (128, 2), (256, 3), (512, 3), (512, 3)]
+
+
+def _vgg_init(key):
+    ks = jax.random.split(key, 16)
+    p = {}
+    cin, ki = 3, 0
+    for bi, (cout, reps) in enumerate(_VGG):
+        for ri in range(reps):
+            p[f"conv{bi+1}-{ri+1}"] = {"w": conv_init(ks[ki], 3, 3, cin, cout)}
+            cin = cout
+            ki += 1
+    p["fc1"] = {"w": truncated_normal_init(ks[13], (512, 1024), 2.0),
+                "bias": jnp.zeros((1024,))}                  # 524,288
+    p["fc2"] = {"w": truncated_normal_init(ks[14], (1024, 1024), 2.0),
+                "bias": jnp.zeros((1024,))}                  # 1,048,576
+    p["fc3"] = {"w": truncated_normal_init(ks[15], (1024, 10), 2.0),
+                "bias": jnp.zeros((10,))}
+    return p
+
+
+def _vgg_apply(p, x):
+    for bi, (cout, reps) in enumerate(_VGG):
+        for ri in range(reps):
+            x = jax.nn.relu(conv(x, p[f"conv{bi+1}-{ri+1}"]["w"]))
+        x = maxpool(x)                                       # 32->16->8->4->2->1
+    x = x.reshape(x.shape[0], -1)                            # 512
+    x = jax.nn.relu(x @ p["fc1"]["w"] + p["fc1"]["bias"])
+    x = jax.nn.relu(x @ p["fc2"]["w"] + p["fc2"]["bias"])
+    return x @ p["fc3"]["w"] + p["fc3"]["bias"]
+
+
+# ---------------------------------------------------------------------------
+# ResNet-32 (CIFAR; paper Table A4: 5 blocks per stage, 16/32/64)
+# ---------------------------------------------------------------------------
+
+def _res_init(key):
+    n = 5
+    keys = iter(jax.random.split(key, 64))
+    p = {"conv1": {"w": conv_init(next(keys), 3, 3, 3, 16)}}     # 432
+    cin = 16
+    for si, cout in enumerate([16, 32, 64]):
+        for bi in range(n):
+            stride_proj = (si > 0 and bi == 0)
+            blk = {
+                "c1": {"w": conv_init(next(keys), 3, 3, cin, cout)},
+                "c2": {"w": conv_init(next(keys), 3, 3, cout, cout)},
+            }
+            if stride_proj:
+                blk["proj"] = {"w": conv_init(next(keys), 1, 1, cin, cout)}
+            p[f"conv{si+1}-{bi+1}"] = blk
+            cin = cout
+    p["fc1"] = {"w": truncated_normal_init(next(keys), (64, 10), 2.0),
+                "bias": jnp.zeros((10,))}                        # 640
+    return p
+
+
+def _res_apply(p, x):
+    x = jax.nn.relu(conv(x, p["conv1"]["w"]))
+    for si, cout in enumerate([16, 32, 64]):
+        for bi in range(5):
+            blk = p[f"conv{si+1}-{bi+1}"]
+            stride = 2 if (si > 0 and bi == 0) else 1
+            h = jax.nn.relu(conv(x, blk["c1"]["w"], stride=stride))
+            h = conv(h, blk["c2"]["w"])
+            if "proj" in blk:
+                x = conv(x, blk["proj"]["w"], stride=stride)
+            x = jax.nn.relu(x + h)
+    x = avgpool_global(x)
+    return x @ p["fc1"]["w"] + p["fc1"]["bias"]
+
+
+CNN_ZOO = {
+    "lenet5": CNNModel("lenet5", (28, 28, 1), 10, _lenet_init, _lenet_apply),
+    "alexnet-cifar": CNNModel("alexnet-cifar", (32, 32, 3), 10,
+                              _alex_init, _alex_apply),
+    "vgg16-cifar": CNNModel("vgg16-cifar", (32, 32, 3), 10,
+                            _vgg_init, _vgg_apply),
+    "resnet32-cifar": CNNModel("resnet32-cifar", (32, 32, 3), 10,
+                               _res_init, _res_apply),
+}
+
+
+def weight_count(params) -> int:
+    """Weights-only count (paper excludes biases from its totals)."""
+    flat, _ = jax.tree_util.tree_flatten_with_path(params)
+    return sum(l.size for path, l in flat
+               if "bias" not in jax.tree_util.keystr(path))

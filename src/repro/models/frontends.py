@@ -1,0 +1,25 @@
+"""Modality frontend STUBS (per the assignment).
+
+``[vlm]`` (paligemma) and ``[audio]`` (musicgen) specify the transformer
+backbone only; the SigLIP vision tower / EnCodec codec are represented by
+*precomputed* patch/frame embeddings. These helpers produce the stand-in
+embedding specs (dry-run) and synthetic embeddings (smoke tests/examples).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+
+def input_embedding_spec(cfg: ModelConfig, batch: int, seq: int,
+                         dtype=jnp.bfloat16):
+    """ShapeDtypeStruct stand-in for frontend-provided embeddings."""
+    return jax.ShapeDtypeStruct((batch, seq, cfg.d_model), dtype)
+
+
+def synthetic_embeddings(key, cfg: ModelConfig, batch: int, seq: int,
+                         dtype=jnp.float32):
+    """Deterministic fake patch/frame embeddings for smoke tests."""
+    return 0.02 * jax.random.normal(key, (batch, seq, cfg.d_model), dtype)

@@ -1,0 +1,156 @@
+"""Shared model layers: norms, embeddings, RoPE, MLPs, sparse-servable dense.
+
+Functional style: ``init_*`` returns a param dict; ``apply`` fns are pure.
+Logical-axis sharding annotations go through distributed.sharding.shard_ann
+(no-op outside a mesh context). Compute dtype is configurable; params are
+kept in param_dtype (fp32 master weights by default).
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import shard_ann
+from repro.sparse.formats import BlockCSR
+from repro.sparse.ops import sparse_matmul
+
+Array = jax.Array
+
+
+def truncated_normal_init(key, shape, scale: float, dtype=jnp.float32):
+    """He-style fan-in init (paper uses He init for ReLU nets)."""
+    fan_in = shape[0] if len(shape) >= 2 else max(shape[-1], 1)
+    std = (scale / fan_in) ** 0.5
+    return std * jax.random.truncated_normal(key, -2.0, 2.0, shape, dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def init_norm(d: int, kind: str = "rmsnorm") -> dict:
+    p = {"scale": jnp.ones((d,), jnp.float32)}
+    if kind == "layernorm":
+        p["norm_bias"] = jnp.zeros((d,), jnp.float32)
+    return p
+
+
+def apply_norm(p: dict, x: Array, kind: str = "rmsnorm",
+               eps: float = 1e-6) -> Array:
+    x32 = x.astype(jnp.float32)
+    if kind == "rmsnorm":
+        var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+        y = x32 * jax.lax.rsqrt(var + eps) * p["scale"]
+    elif kind == "layernorm":
+        mu = jnp.mean(x32, axis=-1, keepdims=True)
+        var = jnp.var(x32, axis=-1, keepdims=True)
+        y = (x32 - mu) * jax.lax.rsqrt(var + eps) * p["scale"] + p["norm_bias"]
+    else:
+        raise ValueError(kind)
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / head
+# ---------------------------------------------------------------------------
+
+def init_embed(key, vocab: int, d: int) -> dict:
+    return {"embedding": truncated_normal_init(key, (vocab, d), 1.0)}
+
+
+def apply_embed(p: dict, tokens: Array, compute_dtype) -> Array:
+    emb = p["embedding"].astype(compute_dtype)
+    x = jnp.take(emb, tokens, axis=0)
+    return shard_ann(x, ("batch", "seq", "embed"))
+
+
+def apply_head(p: dict, x: Array, tie: bool, softcap: Optional[float]) -> Array:
+    w = p["embedding"] if tie else p["head"]
+    # matmul in compute dtype with fp32 accumulation: keeps the (huge)
+    # embedding FSDP gather in bf16 instead of f32 (§Perf iteration C4)
+    w = w.astype(x.dtype)
+    eq = "...d,vd->...v" if tie else "...d,dv->...v"
+    logits = jnp.einsum(eq, x, w, preferred_element_type=jnp.float32)
+    if softcap:
+        logits = softcap * jnp.tanh(logits / softcap)
+    return shard_ann(logits, ("batch", "seq", "vocab"))
+
+
+# ---------------------------------------------------------------------------
+# Activations
+# ---------------------------------------------------------------------------
+
+def activation(name: str):
+    if name == "silu":
+        return jax.nn.silu
+    if name == "gelu":
+        return jax.nn.gelu
+    if name == "relu2":
+        return lambda x: jnp.square(jax.nn.relu(x))
+    if name == "relu":
+        return jax.nn.relu
+    if name == "sigmoid":
+        return jax.nn.sigmoid
+    raise ValueError(name)
+
+
+# ---------------------------------------------------------------------------
+# MLP (gated / plain), with an optional BCSR serving path
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, d: int, ff: int, gated: bool) -> dict:
+    ks = jax.random.split(key, 3)
+    p = {"wi": truncated_normal_init(ks[0], (d, ff), 2.0),
+         "wo": truncated_normal_init(ks[1], (ff, d), 2.0)}
+    if gated:
+        p["wg"] = truncated_normal_init(ks[2], (d, ff), 2.0)
+    return p
+
+
+def apply_mlp(p: dict, x: Array, act: str, gated: bool,
+              sparse_weights: Optional[dict[str, BlockCSR]] = None) -> Array:
+    """If ``sparse_weights`` maps a param name to a BlockCSR, the compressed
+    kernel path is used for that projection (serving mode)."""
+    f = activation(act)
+    dt = x.dtype
+
+    def mm(name, h, w, transpose=False):
+        if sparse_weights and name in sparse_weights:
+            # BCSR stores W as (out, in): y = h @ W' via the paper's kernel
+            hs = h.reshape(-1, h.shape[-1])
+            y = sparse_matmul(hs, sparse_weights[name])
+            return y.reshape(*h.shape[:-1], -1).astype(dt)
+        return jnp.einsum("...d,df->...f", h, w.astype(dt))
+
+    h = mm("wi", x, p["wi"])
+    h = shard_ann(h, ("batch", "seq", "mlp"))
+    if gated:
+        g = mm("wg", x, p["wg"])
+        h = f(g) * h
+    else:
+        h = f(h)
+    out = mm("wo", h, p["wo"])
+    return shard_ann(out, ("batch", "seq", "embed"))
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float) -> Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x: Array, positions: Array, theta: float) -> Array:
+    """x: (..., seq, heads, head_dim); positions: (..., seq)."""
+    freqs = rope_frequencies(x.shape[-1], theta)
+    ang = positions[..., :, None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    cos = jnp.cos(ang)[..., None, :]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    return jnp.concatenate([y1, y2], axis=-1).astype(x.dtype)

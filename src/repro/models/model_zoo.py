@@ -1,0 +1,45 @@
+"""build(name_or_config) -> Model, plus input-spec construction for every
+(arch x shape) dry-run cell."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.configs.base import SHAPES, ModelConfig, ShapeConfig
+from repro.models import frontends
+from repro.models.transformer import Model, make_model
+
+
+def build(arch, reduced: bool = False, remat: bool = True) -> Model:
+    cfg = get_config(arch) if isinstance(arch, str) else arch
+    if reduced:
+        cfg = cfg.reduced()
+    return make_model(cfg, remat=remat)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig | str,
+                data_dtype=jnp.bfloat16) -> dict:
+    """ShapeDtypeStruct stand-ins for one dry-run cell (no allocation).
+
+    train/prefill: {"inputs": (B, S) ids or (B, S, d) frontend embeddings,
+                    "labels": (B, S)}
+    decode:        {"inputs": (B, 1) or (B, 1, d)} -- cache specs come from
+                   Model.init_cache under jax.eval_shape (launch/dryrun.py).
+    """
+    if isinstance(shape, str):
+        shape = SHAPES[shape]
+    b, s = shape.global_batch, shape.seq_len
+    tok = jnp.int32
+    if shape.kind in ("train", "prefill"):
+        if cfg.frontend != "none":
+            inputs = frontends.input_embedding_spec(cfg, b, s, data_dtype)
+        else:
+            inputs = jax.ShapeDtypeStruct((b, s), tok)
+        return {"inputs": inputs, "labels": jax.ShapeDtypeStruct((b, s), tok)}
+    # decode: one new token against a seq_len-deep cache
+    if cfg.frontend != "none":
+        inputs = frontends.input_embedding_spec(cfg, b, 1, data_dtype)
+    else:
+        inputs = jax.ShapeDtypeStruct((b, 1), tok)
+    return {"inputs": inputs}

@@ -1,0 +1,126 @@
+"""Griffin/RecurrentGemma recurrent block: temporal conv + RG-LRU.
+
+RG-LRU (arXiv:2402.19427):
+    r_t = sigmoid(w_a * u_t + b_a)         (recurrence gate, elementwise)
+    i_t = sigmoid(w_x * u_t + b_x)         (input gate, elementwise)
+    log a_t = -c * softplus(A) * r_t       (A learned per channel, c = 8)
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * u_t)
+
+The recurrence is a linear first-order scan -> jax.lax.associative_scan
+(log-depth, MXU-free but VPU parallel) for train/prefill; decode is the
+single-step update carried in the layer state.
+
+Block structure (Griffin "recurrent block"):
+    y = W_out( GeLU(W_gate x)  *  RGLRU(conv1d(W_in x)) )
+
+Gates use elementwise (per-channel) weights; the reference implementation
+uses block-diagonal projections — a documented simplification (DESIGN.md §8).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import shard_ann
+from repro.models.layers import truncated_normal_init
+
+Array = jax.Array
+_C = 8.0
+
+
+def init_rglru(key, cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    w = cfg.lru_width or d
+    cw = cfg.conv1d_width
+    ks = jax.random.split(key, 4)
+    # A init so that a = exp(-c*softplus(A)) spans ~(0.9, 0.999)
+    a_init = jnp.linspace(-2.0, 1.0, w)
+    return {
+        "lru_in": truncated_normal_init(ks[0], (d, w), 1.0),
+        "lru_gate": truncated_normal_init(ks[1], (d, w), 1.0),
+        "lru_out": truncated_normal_init(ks[2], (w, d), 1.0),
+        "conv1d": truncated_normal_init(ks[3], (cw, w), 1.0),
+        "rglru_a_param": a_init,             # excluded from regularization
+        "gate_w_a": jnp.zeros((w,)), "gate_b_a": jnp.zeros((w,)),
+        "gate_w_x": jnp.zeros((w,)), "gate_b_x": jnp.zeros((w,)),
+    }
+
+
+def _causal_conv(u: Array, kern: Array, state: Array | None):
+    """u: (B, S, w); kern: (cw, w) depthwise causal conv.
+
+    state: (B, cw-1, w) trailing context from the previous step (decode) or
+    None (train: left-zero-padded).
+    """
+    cw = kern.shape[0]
+    if state is None:
+        pad = jnp.zeros((u.shape[0], cw - 1, u.shape[2]), u.dtype)
+    else:
+        pad = state.astype(u.dtype)
+    ux = jnp.concatenate([pad, u], axis=1)          # (B, S+cw-1, w)
+    out = sum(ux[:, i:i + u.shape[1]] * kern[i].astype(u.dtype)
+              for i in range(cw))
+    new_state = ux[:, -(cw - 1):] if cw > 1 else pad
+    return out, new_state
+
+
+def _rglru_coeffs(p: dict, u: Array):
+    u32 = u.astype(jnp.float32)
+    r = jax.nn.sigmoid(p["gate_w_a"] * u32 + p["gate_b_a"])
+    i = jax.nn.sigmoid(p["gate_w_x"] * u32 + p["gate_b_x"])
+    log_a = -_C * jax.nn.softplus(p["rglru_a_param"]) * r
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * (i * u32)
+    return a, b
+
+
+def rglru_scan(p: dict, u: Array, h0: Array | None = None) -> tuple[Array, Array]:
+    """u: (B, S, w) -> (h (B, S, w), h_last (B, w)). Linear scan h=a*h+b."""
+    a, b = _rglru_coeffs(p, u)
+    if h0 is not None:
+        # fold the carried state into the first step's offset
+        b = b.at[:, 0].add(a[:, 0] * h0.astype(jnp.float32))
+
+    def combine(x, y):
+        a1, b1 = x
+        a2, b2 = y
+        return a2 * a1, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h.astype(u.dtype), h[:, -1]
+
+
+def rglru_step(p: dict, u: Array, h: Array) -> tuple[Array, Array]:
+    """Single decode step. u: (B, 1, w); h: (B, w)."""
+    a, b = _rglru_coeffs(p, u)
+    h2 = a[:, 0] * h.astype(jnp.float32) + b[:, 0]
+    return h2[:, None].astype(u.dtype), h2
+
+
+def apply_rglru_block(p: dict, x: Array, cfg: ModelConfig,
+                      state: dict | None = None):
+    """Griffin recurrent block. state None => train/prefill full-sequence.
+
+    Returns (y, new_state) where state = {"h": (B,w), "conv": (B,cw-1,w)}.
+    """
+    dt = x.dtype
+    gate = jax.nn.gelu(jnp.einsum("bsd,dw->bsw", x, p["lru_gate"].astype(dt)))
+    u = jnp.einsum("bsd,dw->bsw", x, p["lru_in"].astype(dt))
+    u = shard_ann(u, ("batch", "seq", "lru"))
+    conv_state = state["conv"] if state is not None else None
+    u, new_conv = _causal_conv(u, p["conv1d"], conv_state)
+    if state is None:
+        h, h_last = rglru_scan(p, u)
+    else:
+        h, h_last = rglru_step(p, u, state["h"])
+    h = shard_ann(h, ("batch", "seq", "lru"))
+    y = jnp.einsum("bsw,wd->bsd", gate * h, p["lru_out"].astype(dt))
+    y = shard_ann(y, ("batch", "seq", "embed"))
+    return y, {"h": h_last, "conv": new_conv}
+
+
+def init_rglru_state(cfg: ModelConfig, batch: int, dtype) -> dict:
+    w = cfg.lru_width or cfg.d_model
+    return {"h": jnp.zeros((batch, w), jnp.float32),
+            "conv": jnp.zeros((batch, cfg.conv1d_width - 1, w), dtype)}

@@ -1,0 +1,223 @@
+"""RWKV-6 "Finch" (arXiv:2404.05892): attention-free, data-dependent decay.
+
+Time mixing (per head, dk = dv = head_dim):
+    S_t = diag(w_t) S_{t-1} + k_t^T v_t
+    o_t = r_t ( S_{t-1} + diag(u) k_t^T v_t )
+
+with token-shift ddlerp (data-dependent lerp via LoRA) producing r,k,v,g,w
+inputs, and w_t = exp(-exp(tdecay_t)) per channel.
+
+Train/prefill uses the **chunked parallel form** (the same schedule RWKV's
+CUDA kernel and flash-linear-attention use): within a chunk of length L the
+intra-chunk part is a masked (L, L) matmul — MXU-friendly — and the
+inter-chunk part propagates the (dk, dv) state with a scan over chunks.
+Decode is the O(1) recurrence. Chunk math is fp32 with clamped log-decay
+(numerics note in the module test).
+
+Channel mixing is the RWKV squared-ReLU FFN with token shift.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import shard_ann
+from repro.models.layers import truncated_normal_init
+
+Array = jax.Array
+_LORA_R = 32
+_CHUNK = 64
+_CLAMP = 25.0      # max |cumulative log-decay| inside a chunk (exp(25)~7e10)
+
+
+def _lora(key, d: int, out: int, r: int = _LORA_R) -> dict:
+    k1, k2 = jax.random.split(key)
+    return {"lora_a": truncated_normal_init(k1, (d, r), 1.0),
+            "lora_b": jnp.zeros((r, out))}
+
+
+def _apply_lora(p: dict, x: Array) -> Array:
+    h = jnp.tanh(jnp.einsum("...d,dr->...r", x.astype(jnp.float32), p["lora_a"]))
+    return jnp.einsum("...r,ro->...o", h, p["lora_b"])
+
+
+def init_time_mix(key, cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    ks = jax.random.split(key, 12)
+    n_heads = d // cfg.rwkv_head_dim
+    p = {
+        "rwkv_r": truncated_normal_init(ks[0], (d, d), 1.0),
+        "rwkv_k": truncated_normal_init(ks[1], (d, d), 1.0),
+        "rwkv_v": truncated_normal_init(ks[2], (d, d), 1.0),
+        "rwkv_g": truncated_normal_init(ks[3], (d, d), 1.0),
+        "rwkv_o": truncated_normal_init(ks[4], (d, d), 1.0),
+        "time_decay_base": jnp.linspace(-6.0, -1.0, d),   # tdecay init
+        "time_first": jnp.linspace(0.1, 1.0, d),          # u ("bonus"),
+        # per-channel (a constant init would mask dk/dv axis mix-ups)
+        "mu": {name: 0.5 * jnp.ones((d,))
+               for name in ("r", "k", "v", "g", "w")},
+        "lora_w": _lora(ks[5], d, d),                     # ddlerp for decay
+        "ln_x_scale": jnp.ones((d,)),                     # per-head groupnorm
+    }
+    return p
+
+
+def init_channel_mix(key, cfg: ModelConfig) -> dict:
+    d, ff = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    return {
+        "cm_k": truncated_normal_init(ks[0], (d, ff), 2.0),
+        "cm_v": truncated_normal_init(ks[1], (ff, d), 2.0),
+        "cm_r": truncated_normal_init(ks[2], (d, d), 1.0),
+        "mu_k": 0.5 * jnp.ones((d,)),
+        "mu_r": 0.5 * jnp.ones((d,)),
+    }
+
+
+def _token_shift(x: Array, last: Array | None) -> Array:
+    """x_{t-1} with the previous step's trailing token (decode) or zeros."""
+    if last is None:
+        pad = jnp.zeros_like(x[:, :1])
+    else:
+        pad = last[:, None].astype(x.dtype)
+    return jnp.concatenate([pad, x[:, :-1]], axis=1)
+
+
+def _heads(x: Array, hd: int) -> Array:
+    b, s, d = x.shape
+    return x.reshape(b, s, d // hd, hd)
+
+
+def chunked_wkv(r, k, v, logw, u, state, chunk: int = _CHUNK):
+    """Chunked linear-attention with per-channel data-dependent decay.
+
+    r,k,v: (B, S, H, hd); logw: (B, S, H, hd) (<= 0); u: (H, hd);
+    state: (B, H, hd, hd) or None. Returns (o, state').
+    """
+    b, s, h, hd = r.shape
+    assert s % chunk == 0 or s < chunk, (s, chunk)
+    chunk = min(chunk, s)
+    n = s // chunk
+    f32 = jnp.float32
+
+    def split(x):
+        return (x.astype(f32).reshape(b, n, chunk, h, hd)
+                .transpose(1, 0, 3, 2, 4))          # (n, B, H, L, hd)
+
+    rs, ks_, vs, lws = split(r), split(k), split(v), split(logw)
+    if state is None:
+        state = jnp.zeros((b, h, hd, hd), f32)
+
+    tri_strict = jnp.tril(jnp.ones((chunk, chunk), bool), -1)
+
+    def body(S, xs):
+        rc, kc, vc, lw = xs                          # (B, H, L, hd)
+        cum = jnp.cumsum(lw, axis=2)                 # inclusive cumulative
+        cum_prev = cum - lw                          # exclusive (up to t-1)
+        total = cum[:, :, -1:, :]                    # (B, H, 1, hd)
+        # inter-chunk: o_t += (r_t * exp(cum_prev)) @ S
+        r_dec = rc * jnp.exp(cum_prev)
+        o = jnp.einsum("bhld,bhdv->bhlv", r_dec, S)
+        # intra-chunk: A[t,i] = sum_d r[t,d] k[i,d] exp(cum_prev[t]-cum[i]), i<t
+        k_dec = kc * jnp.exp(jnp.clip(-cum, a_max=_CLAMP))
+        att = jnp.einsum("bhld,bhmd->bhlm", r_dec, k_dec)
+        att = jnp.where(tri_strict[None, None], att, 0.0)
+        o = o + jnp.einsum("bhlm,bhmv->bhlv", att, vc)
+        # current-token bonus: o_t += (r_t * u * k_t) . v_t
+        bonus = jnp.sum(rc * u[None, :, None, :] * kc, axis=-1, keepdims=True)
+        o = o + bonus * vc
+        # state update: S' = diag(exp(total)) S + sum_i exp(total-cum_i) k_i v_i
+        k_carry = kc * jnp.exp(jnp.clip(total - cum, a_max=_CLAMP))
+        S2 = jnp.exp(total)[..., 0, :, None] * S + \
+            jnp.einsum("bhld,bhlv->bhdv", k_carry, vc)
+        return S2, o
+
+    state, outs = jax.lax.scan(body, state, (rs, ks_, vs, lws))
+    o = outs.transpose(1, 0, 3, 2, 4).reshape(b, s, h, hd)
+    return o, state
+
+
+def wkv_step(r, k, v, logw, u, state):
+    """O(1) decode recurrence. r,k,v,logw: (B, 1, H, hd)."""
+    f32 = jnp.float32
+    rc, kc, vc = (x[:, 0].astype(f32) for x in (r, k, v))
+    w = jnp.exp(logw[:, 0].astype(f32))              # (B, H, hd)
+    kv = jnp.einsum("bhd,bhv->bhdv", kc, vc)
+    # u ("bonus") weights the k index (dk), not dv
+    o = jnp.einsum("bhd,bhdv->bhv", rc, state + u[None, :, :, None] * kv)
+    state2 = w[..., None] * state + kv
+    return o[:, None], state2
+
+
+def apply_time_mix(p: dict, x: Array, cfg: ModelConfig,
+                   state: dict | None = None):
+    """RWKV-6 time mixing. state = {"S": (B,H,hd,hd), "shift": (B,d)}."""
+    dt = x.dtype
+    hd = cfg.rwkv_head_dim
+    prev = _token_shift(x, state["shift"] if state else None)
+    xx = (prev - x).astype(jnp.float32)
+    x32 = x.astype(jnp.float32)
+
+    def mix(name):
+        return (x32 + xx * p["mu"][name]).astype(dt)
+
+    xr, xk, xv, xg, xw = (mix(nm) for nm in ("r", "k", "v", "g", "w"))
+    r = jnp.einsum("bsd,de->bse", xr, p["rwkv_r"].astype(dt))
+    k = jnp.einsum("bsd,de->bse", xk, p["rwkv_k"].astype(dt))
+    v = jnp.einsum("bsd,de->bse", xv, p["rwkv_v"].astype(dt))
+    g = jax.nn.silu(jnp.einsum("bsd,de->bse", xg, p["rwkv_g"].astype(dt)))
+
+    tdecay = p["time_decay_base"] + _apply_lora(p["lora_w"], xw)
+    logw = -jnp.exp(tdecay.astype(jnp.float32))       # (B, S, d), <= 0
+    u = p["time_first"].reshape(-1, hd)               # (H, hd)
+
+    rh, kh, vh = _heads(r, hd), _heads(k, hd), _heads(v, hd)
+    lwh = _heads(logw, hd)
+    rh = shard_ann(rh, ("batch", "seq", "rwkv_heads", "head_dim"))
+
+    if state is None:
+        o, s_new = chunked_wkv(rh, kh, vh, lwh, u, None)
+    else:
+        o, s_new = wkv_step(rh, kh, vh, lwh, u, state["S"])
+
+    b, s = x.shape[0], x.shape[1]
+    o = o.reshape(b, s, -1)
+    # per-head groupnorm (ln_x)
+    oh = o.reshape(b, s, -1, hd)
+    mu = jnp.mean(oh, axis=-1, keepdims=True)
+    var = jnp.var(oh, axis=-1, keepdims=True)
+    o = ((oh - mu) * jax.lax.rsqrt(var + 1e-5)).reshape(b, s, -1)
+    o = (o * p["ln_x_scale"]).astype(dt) * g
+    y = jnp.einsum("bse,ed->bsd", o, p["rwkv_o"].astype(dt))
+    y = shard_ann(y, ("batch", "seq", "embed"))
+    new_state = {"S": s_new, "shift": x[:, -1].astype(jnp.float32)}
+    return y, new_state
+
+
+def apply_channel_mix(p: dict, x: Array, state: dict | None = None):
+    """RWKV FFN: sigmoid(W_r xr) * (W_v relu(W_k xk)^2)."""
+    dt = x.dtype
+    prev = _token_shift(x, state["shift"] if state else None)
+    xx = (prev - x).astype(jnp.float32)
+    x32 = x.astype(jnp.float32)
+    xk = (x32 + xx * p["mu_k"]).astype(dt)
+    xr = (x32 + xx * p["mu_r"]).astype(dt)
+    k = jnp.einsum("bsd,df->bsf", xk, p["cm_k"].astype(dt))
+    k = shard_ann(k, ("batch", "seq", "mlp"))
+    kv = jnp.einsum("bsf,fd->bsd", jnp.square(jax.nn.relu(k)),
+                    p["cm_v"].astype(dt))
+    r = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", xr, p["cm_r"].astype(dt)))
+    y = r * kv
+    y = shard_ann(y, ("batch", "seq", "embed"))
+    return y, {"shift": x[:, -1].astype(jnp.float32)}
+
+
+def init_rwkv_state(cfg: ModelConfig, batch: int) -> dict:
+    d = cfg.d_model
+    hd = cfg.rwkv_head_dim
+    return {
+        "tm": {"S": jnp.zeros((batch, d // hd, hd, hd), jnp.float32),
+               "shift": jnp.zeros((batch, d), jnp.float32)},
+        "cm": {"shift": jnp.zeros((batch, d), jnp.float32)},
+    }

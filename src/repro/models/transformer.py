@@ -1,0 +1,284 @@
+"""Composable decoder stack covering all assigned architectures.
+
+A config's ``block_pattern`` (e.g. ("attn",) or ("rglru","rglru","attn") or
+("rwkv",)) defines a *super-block*; the stack is a ``lax.scan`` over
+``n_super_blocks`` stacked copies (HLO/compile-time O(1) in depth) plus an
+unrolled remainder (RecurrentGemma's 38 = 12x3 + 2). Each pattern element is
+a full layer: mixer (attention / RG-LRU / RWKV time-mix) + FFN (MLP / MoE /
+RWKV channel-mix), pre-norm residuals.
+
+Two entry points per model:
+    apply_train(params, batch)            full-sequence forward -> logits, aux
+    decode_step(params, tok, cache, pos)  one token + cache -> logits, cache
+
+Both are pure functions built by ``make_model(cfg)``; remat policy for the
+scan body is configurable (train memory).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import shard_ann
+from repro.models import attention, moe as moe_lib, rglru, rwkv6
+from repro.models.layers import (apply_embed, apply_head, apply_mlp,
+                                 apply_norm, init_embed, init_mlp, init_norm,
+                                 truncated_normal_init)
+
+Array = jax.Array
+PyTree = Any
+
+
+def _dtype(name: str):
+    return {"float32": jnp.float32, "bfloat16": jnp.bfloat16,
+            "float16": jnp.float16}[name]
+
+
+# ---------------------------------------------------------------------------
+# Per-layer init / apply
+# ---------------------------------------------------------------------------
+
+def _init_layer(key, cfg: ModelConfig, kind: str) -> dict:
+    ks = jax.random.split(key, 4)
+    p: dict = {"pre_norm": init_norm(cfg.d_model, cfg.norm)}
+    if kind == "attn":
+        p["attn"] = attention.init_attention(ks[0], cfg)
+    elif kind == "rglru":
+        p["rec"] = rglru.init_rglru(ks[0], cfg)
+    elif kind == "rwkv":
+        p["tm"] = rwkv6.init_time_mix(ks[0], cfg)
+    else:
+        raise ValueError(kind)
+    p["ffn_norm"] = init_norm(cfg.d_model, cfg.norm)
+    if kind == "rwkv":
+        p["cm"] = rwkv6.init_channel_mix(ks[1], cfg)
+    elif cfg.moe is not None:
+        p["moe"] = moe_lib.init_moe(ks[1], cfg)
+    else:
+        p["mlp"] = init_mlp(ks[1], cfg.d_model, cfg.d_ff, cfg.mlp_gated)
+    return p
+
+
+def _zero_aux():
+    return {"load_balance": jnp.zeros((), jnp.float32),
+            "z_loss": jnp.zeros((), jnp.float32)}
+
+
+def _apply_layer_train(p: dict, x: Array, cfg: ModelConfig, kind: str,
+                       positions: Array) -> tuple[Array, dict]:
+    h = apply_norm(p["pre_norm"], x, cfg.norm)
+    if kind == "attn":
+        mix = attention.apply_attention(p["attn"], h, cfg, positions)
+    elif kind == "rglru":
+        mix, _ = rglru.apply_rglru_block(p["rec"], h, cfg, None)
+    elif kind == "rwkv":
+        mix, _ = rwkv6.apply_time_mix(p["tm"], h, cfg, None)
+    x = x + mix
+    h = apply_norm(p["ffn_norm"], x, cfg.norm)
+    aux = _zero_aux()
+    if kind == "rwkv":
+        f, _ = rwkv6.apply_channel_mix(p["cm"], h, None)
+    elif cfg.moe is not None:
+        f, aux = moe_lib.apply_moe(p["moe"], h, cfg)
+    else:
+        f = apply_mlp(p["mlp"], h, cfg.act, cfg.mlp_gated)
+    return x + f, aux
+
+
+def _apply_layer_decode(p: dict, x: Array, cfg: ModelConfig, kind: str,
+                        cache: dict, pos: Array) -> tuple[Array, dict]:
+    h = apply_norm(p["pre_norm"], x, cfg.norm)
+    new_cache = dict(cache)
+    if kind == "attn":
+        mix, new_cache["attn"] = attention.decode_attention(
+            p["attn"], h, cache["attn"], pos, cfg)
+    elif kind == "rglru":
+        mix, new_cache["rec"] = rglru.apply_rglru_block(
+            p["rec"], h, cfg, cache["rec"])
+    elif kind == "rwkv":
+        mix, new_cache["tm"] = rwkv6.apply_time_mix(
+            p["tm"], h, cfg, cache["tm"])
+    x = x + mix
+    h = apply_norm(p["ffn_norm"], x, cfg.norm)
+    if kind == "rwkv":
+        f, new_cache["cm"] = rwkv6.apply_channel_mix(p["cm"], h, cache["cm"])
+    elif cfg.moe is not None:
+        f, _ = moe_lib.apply_moe(p["moe"], h, cfg)
+    else:
+        f = apply_mlp(p["mlp"], h, cfg.act, cfg.mlp_gated)
+    return x + f, new_cache
+
+
+def _init_layer_cache(cfg: ModelConfig, kind: str, batch: int, seq_len: int,
+                      dtype) -> dict:
+    if kind == "attn":
+        return {"attn": attention.init_kv_cache(cfg, batch, seq_len, dtype)}
+    if kind == "rglru":
+        return {"rec": rglru.init_rglru_state(cfg, batch, dtype)}
+    if kind == "rwkv":
+        st = rwkv6.init_rwkv_state(cfg, batch)
+        return {"tm": st["tm"], "cm": st["cm"]}
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# Super-block (one pattern repeat)
+# ---------------------------------------------------------------------------
+
+def _init_super(key, cfg: ModelConfig) -> dict:
+    ks = jax.random.split(key, len(cfg.block_pattern))
+    return {f"b{i}_{kind}": _init_layer(ks[i], cfg, kind)
+            for i, kind in enumerate(cfg.block_pattern)}
+
+
+def _super_train(p: dict, x: Array, cfg: ModelConfig, positions: Array):
+    aux = _zero_aux()
+    for i, kind in enumerate(cfg.block_pattern):
+        x, a = _apply_layer_train(p[f"b{i}_{kind}"], x, cfg, kind, positions)
+        aux = jax.tree.map(jnp.add, aux, a)
+    # sequence-parallel residual carry: the inter-layer (bwd-residual) x is
+    # seq-sharded over 'model' so the layer-stack residual shrinks by the
+    # TP degree (no-op when seq doesn't divide / no mesh). RWKV blocks are
+    # exempt: token-shift ddlerp + chunked WKV consume full sequences five
+    # ways per block, and the re-gathers cost more than the carry saves
+    # (measured 3x memory-term regression; EXPERIMENTS.md §Perf).
+    if "rwkv" not in cfg.block_pattern:
+        x = shard_ann(x, ("batch", "res_seq", "embed"))
+    return x, aux
+
+
+def _super_decode(p: dict, x: Array, cfg: ModelConfig, cache: dict, pos):
+    new_cache = {}
+    for i, kind in enumerate(cfg.block_pattern):
+        key = f"b{i}_{kind}"
+        x, new_cache[key] = _apply_layer_decode(p[key], x, cfg, kind,
+                                                cache[key], pos)
+    return x, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Whole model
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+    init: Callable
+    apply_train: Callable       # (params, batch) -> (logits, aux)
+    apply_hidden: Callable      # (params, batch) -> (hidden, aux)  [no head]
+    head: Callable              # (params, hidden) -> logits
+    decode_step: Callable       # (params, x, cache, pos) -> (logits, cache)
+    init_cache: Callable        # (batch, seq_len, dtype) -> cache
+
+
+def make_model(cfg: ModelConfig, remat: bool = True,
+               remat_policy: str = "nothing") -> Model:
+    """remat_policy: 'nothing' (save only the per-layer carry — minimal
+    memory, bwd recomputes the layer; §Perf iteration C2) or 'dots' (save
+    projection outputs — less recompute, ~6x the residual memory)."""
+    cdt = _dtype(cfg.compute_dtype)
+    n_super = cfg.n_super_blocks
+    rem = cfg.remainder_pattern
+    policy = (jax.checkpoint_policies.nothing_saveable
+              if remat_policy == "nothing"
+              else jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+
+    def init(key) -> PyTree:
+        k_emb, k_layers, k_rem, k_head = jax.random.split(key, 4)
+        params: dict = {"embed": init_embed(k_emb, cfg.vocab, cfg.d_model)}
+        sub_keys = jax.random.split(k_layers, n_super)
+        params["layers"] = jax.vmap(
+            lambda kk: _init_super(kk, cfg))(sub_keys)
+        if rem:
+            rks = jax.random.split(k_rem, len(rem))
+            params["rem"] = {f"r{i}_{kind}": _init_layer(rks[i], cfg, kind)
+                             for i, kind in enumerate(rem)}
+        params["final_norm"] = init_norm(cfg.d_model, cfg.norm)
+        if not cfg.tie_embeddings:
+            params["head"] = truncated_normal_init(
+                k_head, (cfg.d_model, cfg.vocab), 1.0)
+        return params
+
+    def embed_inputs(params, inputs):
+        """Token ids (B, S) int32, or precomputed embeddings (B, S, d) for
+        stub frontends (vlm/audio per the assignment)."""
+        if inputs.ndim == 3:                     # frontend stub: embeddings
+            return inputs.astype(cdt)
+        return apply_embed(params["embed"], inputs, cdt)
+
+    def head(params, x):
+        x = apply_norm(params["final_norm"], x, cfg.norm)
+        hp = {"embedding": params["embed"]["embedding"]} if cfg.tie_embeddings \
+            else {"head": params["head"]}
+        return apply_head(hp, x, cfg.tie_embeddings, cfg.logit_softcap)
+
+    def apply_hidden(params, batch) -> tuple[Array, dict]:
+        inputs = batch["inputs"]
+        x = embed_inputs(params, inputs)
+        b, s = x.shape[0], x.shape[1]
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+
+        def body(carry, layer_p):
+            x, aux = carry
+            x2, a = _super_train(layer_p, x, cfg, positions)
+            return (x2, jax.tree.map(jnp.add, aux, a)), None
+
+        body_fn = body
+        if remat:
+            body_fn = jax.checkpoint(body, policy=policy)
+        (x, aux), _ = jax.lax.scan(body_fn, (x, _zero_aux()),
+                                   params["layers"])
+        for i, kind in enumerate(rem):
+            x, a = _apply_layer_train(params["rem"][f"r{i}_{kind}"], x, cfg,
+                                      kind, positions)
+            aux = jax.tree.map(jnp.add, aux, a)
+        return x, aux
+
+    def apply_train(params, batch) -> tuple[Array, dict]:
+        x, aux = apply_hidden(params, batch)
+        return head(params, x), aux
+
+    def init_cache(batch: int, seq_len: int, dtype=None) -> PyTree:
+        dtype = dtype or cdt
+        def one_super():
+            return {f"b{i}_{kind}": _init_layer_cache(cfg, kind, batch,
+                                                      seq_len, dtype)
+                    for i, kind in enumerate(cfg.block_pattern)}
+        stacked = jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (n_super,) + x.shape).copy(),
+            one_super())
+        cache = {"layers": stacked}
+        if rem:
+            cache["rem"] = {f"r{i}_{kind}": _init_layer_cache(
+                cfg, kind, batch, seq_len, dtype)
+                for i, kind in enumerate(rem)}
+        return cache
+
+    def decode_step(params, inputs, cache, pos) -> tuple[Array, PyTree]:
+        """inputs: (B, 1) ids or (B, 1, d) embeddings; pos: scalar int32."""
+        x = embed_inputs(params, inputs)
+
+        def body(x, xs):
+            layer_p, layer_c = xs
+            x2, c2 = _super_decode(layer_p, x, cfg, layer_c, pos)
+            return x2, c2
+
+        x, new_layer_cache = jax.lax.scan(
+            body, x, (params["layers"], cache["layers"]))
+        new_cache = {"layers": new_layer_cache}
+        if rem:
+            new_cache["rem"] = {}
+            for i, kind in enumerate(rem):
+                key = f"r{i}_{kind}"
+                x, new_cache["rem"][key] = _apply_layer_decode(
+                    params["rem"][key], x, cfg, kind, cache["rem"][key], pos)
+        return head(params, x), new_cache
+
+    return Model(cfg=cfg, init=init, apply_train=apply_train,
+                 apply_hidden=apply_hidden, head=head,
+                 decode_step=decode_step, init_cache=init_cache)

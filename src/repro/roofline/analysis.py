@@ -1,0 +1,134 @@
+"""Three-term roofline from a compiled dry-run artifact (TPU v5e targets).
+
+    compute    = FLOPs_per_device / peak_flops          (= global/(chips*peak))
+    memory     = bytes_per_device / hbm_bw
+    collective = collective_bytes_per_device / link_bw
+
+Per-device numbers come from the trip-count-corrected HLO parser
+(roofline/hlo_cost.py); the built-in ``cost_analysis()`` values are kept as
+debug columns. MODEL_FLOPS is the analytic useful-work count:
+6*N*D (train, dense), 6*N_active*D (train, MoE), 2*N*D (inference fwd),
+where D = tokens processed by the step.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.roofline.hlo_cost import Cost, module_cost
+
+# TPU v5e hardware constants (per the assignment)
+PEAK_FLOPS_BF16 = 197e12          # FLOP/s per chip
+HBM_BW = 819e9                    # bytes/s per chip
+ICI_LINK_BW = 50e9                # bytes/s per link
+
+
+@dataclasses.dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    # per-device (parsed, trip-count-corrected)
+    flops_per_device: float
+    bytes_per_device: float
+    collective_bytes_per_device: float
+    collective_breakdown: dict
+    # terms (seconds)
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    # analytic useful work
+    model_flops_global: float
+    # xla-reported debug values (NOT trip-count corrected)
+    xla_flops: Optional[float] = None
+    xla_bytes: Optional[float] = None
+    memory_per_device_bytes: Optional[int] = None
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        """MODEL_FLOPS / (parsed HLO FLOPs x chips): remat/redundancy waste."""
+        hlo_global = self.flops_per_device * self.chips
+        return self.model_flops_global / hlo_global if hlo_global else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Useful-FLOPs throughput at the bound vs chip peak (the score):
+        (MODEL_FLOPS / chips / bound_seconds) / PEAK."""
+        if self.bound_s <= 0:
+            return 0.0
+        per_chip_rate = self.model_flops_global / self.chips / self.bound_s
+        return per_chip_rate / PEAK_FLOPS_BF16
+
+    def as_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d.update(dominant=self.dominant, bound_s=self.bound_s,
+                 useful_flops_ratio=self.useful_flops_ratio,
+                 roofline_fraction=self.roofline_fraction)
+        return d
+
+
+def model_flops(cfg: ModelConfig, shape: ShapeConfig) -> float:
+    """Analytic useful FLOPs for one step of this (arch x shape) cell."""
+    n = cfg.n_active_params() if cfg.moe is not None else cfg.n_params()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    # decode: one token per sequence per step
+    tokens = shape.global_batch * 1
+    return 2.0 * n * tokens
+
+
+def analyze(hlo_text: str, cfg: ModelConfig, shape: ShapeConfig,
+            mesh_name: str, chips: int,
+            xla_cost: Optional[dict] = None,
+            memory_stats=None) -> Roofline:
+    c: Cost = module_cost(hlo_text)
+    mem_bytes = None
+    if memory_stats is not None:
+        mem_bytes = int(memory_stats.argument_size_in_bytes
+                        + memory_stats.temp_size_in_bytes
+                        + memory_stats.output_size_in_bytes)
+    return Roofline(
+        arch=cfg.name, shape=shape.name, mesh=mesh_name, chips=chips,
+        flops_per_device=c.flops,
+        bytes_per_device=c.bytes,
+        collective_bytes_per_device=c.total_collective_bytes,
+        collective_breakdown=dict(c.collective_bytes),
+        compute_s=c.flops / PEAK_FLOPS_BF16,
+        memory_s=c.bytes / HBM_BW,
+        collective_s=c.total_collective_bytes / ICI_LINK_BW,
+        model_flops_global=model_flops(cfg, shape),
+        xla_flops=(xla_cost or {}).get("flops"),
+        xla_bytes=(xla_cost or {}).get("bytes accessed"),
+        memory_per_device_bytes=mem_bytes,
+    )
+
+
+def format_table(rows: list[dict]) -> str:
+    hdr = (f"{'arch':24s} {'shape':12s} {'mesh':10s} "
+           f"{'compute_s':>10s} {'memory_s':>10s} {'collect_s':>10s} "
+           f"{'dominant':>10s} {'useful%':>8s} {'roofline%':>9s}")
+    lines = [hdr, "-" * len(hdr)]
+    for r in rows:
+        lines.append(
+            f"{r['arch']:24s} {r['shape']:12s} {r['mesh']:10s} "
+            f"{r['compute_s']:10.4f} {r['memory_s']:10.4f} "
+            f"{r['collective_s']:10.4f} {r['dominant']:>10s} "
+            f"{100*r['useful_flops_ratio']:7.1f}% "
+            f"{100*r['roofline_fraction']:8.2f}%")
+    return "\n".join(lines)

@@ -1,0 +1,388 @@
+"""Trip-count-aware HLO cost model (parses ``compiled.as_text()``).
+
+Why not ``compiled.cost_analysis()``? XLA's HloCostAnalysis visits a while
+body ONCE — it does not multiply by the trip count. Our stacks scan over
+layers (and attention/RWKV scan over chunks), so the built-in numbers
+under-report FLOPs/bytes by 10-1000x (verified empirically; see
+EXPERIMENTS.md §Dry-run methodology). This parser walks the partitioned HLO
+module, costing:
+
+  * FLOPs: ``dot`` (2 * result_elems * contracted_elems, from the operand
+    shape + contracting dims) and ``convolution`` (2 * out_elems *
+    kernel_spatial * cin/groups); descends into fusions/calls,
+  * bytes: per top-level op, operands + results (a fusion counts as one op —
+    one pass over its inputs/outputs, the roofline-correct model),
+  * collective bytes by kind (all-gather / all-reduce / reduce-scatter /
+    all-to-all / collective-permute), costed at result bytes,
+
+and multiplies ``while`` bodies by ``backend_config.known_trip_count`` (the
+scan length jax always emits). All numbers are PER DEVICE for the SPMD
+module; multiply by chip count for global.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import math
+import re
+from typing import Optional
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16, "s4": 0.5, "u4": 0.5,
+    "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"\b([a-z]\d*[a-z0-9]*)\[([0-9,]*)\]")
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _shape_tokens(text: str):
+    """Yield (dtype, dims) for every TYPE[dims] token in text."""
+    for m in _SHAPE_RE.finditer(text):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        shape = [int(d) for d in dims.split(",") if d] if dims else []
+        yield dt, shape
+
+
+def _nelems(shape) -> int:
+    return math.prod(shape) if shape else 1
+
+
+def _tok_bytes(dt, shape) -> float:
+    return _nelems(shape) * _DTYPE_BYTES[dt]
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    kind: str
+    result_bytes: float
+    result_elems: int
+    result_shapes: list          # [(dtype, dims), ...]
+    operands: list               # %names
+    called: list                 # computation names (fusion/call/while...)
+    attrs: str                   # raw tail for dot dims / trip count
+    line: str
+
+    @property
+    def op_name_meta(self) -> str:
+        m = re.search(r'op_name="([^"]*)"', self.attrs)
+        return m.group(1) if m else ""
+
+
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.+?)\s+([\w\-]+)\((.*)$")
+
+
+def _parse_op(line: str) -> Optional[Op]:
+    m = _OP_RE.match(line)
+    if not m:
+        return None
+    name, type_str, kind, rest = m.groups()
+    shapes = list(_shape_tokens(type_str))
+    rbytes = sum(_tok_bytes(dt, sh) for dt, sh in shapes)
+    relems = sum(_nelems(sh) for dt, sh in shapes)
+    operands = re.findall(r"%([\w.\-]+)", rest.split("), ")[0]) \
+        if ")" in rest else []
+    called = []
+    for key in ("calls=", "body=", "condition=", "to_apply=",
+                "branch_computations={"):
+        for mm in re.finditer(re.escape(key) + r"[%{]?%?([\w.\-]+)", rest):
+            called.append(mm.group(1))
+    return Op(name=name, kind=kind, result_bytes=rbytes, result_elems=relems,
+              result_shapes=shapes, operands=operands, called=called,
+              attrs=rest, line=line)
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    ops: list
+    symbols: dict                # %name -> (bytes, shapes)
+
+
+def parse_module(hlo_text: str) -> tuple[dict, str]:
+    """Returns ({name: Computation}, entry_name)."""
+    comps: dict[str, Computation] = {}
+    entry = None
+    current = None
+    for line in hlo_text.splitlines():
+        if not line.strip():
+            continue
+        if not line.startswith(" ") and "{" in line:
+            m = re.match(r"^(ENTRY\s+)?%([\w.\-]+)", line.strip())
+            if m:
+                current = Computation(m.group(2), [], {})
+                comps[current.name] = current
+                if m.group(1):
+                    entry = current.name
+                continue
+        if line.strip() == "}":
+            continue
+        if current is None:
+            continue
+        op = _parse_op(line)
+        if op is not None:
+            current.ops.append(op)
+            current.symbols[op.name] = (op.result_bytes, op.result_shapes)
+    assert entry is not None, "no ENTRY computation found"
+    return comps, entry
+
+
+def _dot_flops(op: Op, comp: Computation) -> float:
+    # contracted size from lhs operand shape + lhs_contracting_dims
+    m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", op.attrs)
+    if not m or not op.operands:
+        return 2.0 * op.result_elems
+    dims = [int(d) for d in m.group(1).split(",") if d]
+    lhs = comp.symbols.get(op.operands[0])
+    if lhs is None or not lhs[1]:
+        return 2.0 * op.result_elems
+    lhs_shape = lhs[1][0][1]
+    contracted = math.prod(lhs_shape[d] for d in dims) if dims else 1
+    return 2.0 * op.result_elems * contracted
+
+
+def _conv_flops(op: Op, comp: Computation) -> float:
+    # 2 * out_elems * (kernel spatial elems * cin / groups): approximate via
+    # rhs operand elems / cout
+    if len(op.operands) < 2:
+        return 2.0 * op.result_elems
+    rhs = comp.symbols.get(op.operands[1])
+    if rhs is None or not rhs[1]:
+        return 2.0 * op.result_elems
+    rhs_shape = rhs[1][0][1]
+    g = 1
+    m = re.search(r"feature_group_count=(\d+)", op.attrs)
+    if m:
+        g = int(m.group(1))
+    # HWIO: last dim = cout
+    cout = rhs_shape[-1] if rhs_shape else 1
+    kernel_per_out = _nelems(rhs_shape) / max(cout, 1)
+    return 2.0 * op.result_elems * kernel_per_out / max(g, 1)
+
+
+def _trip_count(op: Op) -> int:
+    m = re.search(r'"known_trip_count":\{"n":"(\d+)"\}', op.attrs)
+    return int(m.group(1)) if m else 1
+
+
+_SKIP_BYTES_KINDS = {"parameter", "constant", "get-tuple-element", "tuple",
+                     "bitcast", "after-all", "optimization-barrier"}
+
+
+@dataclasses.dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    collective_bytes: dict = dataclasses.field(default_factory=dict)
+    collective_count: dict = dataclasses.field(default_factory=dict)
+
+    def add(self, other: "Cost", mult: float = 1.0):
+        self.flops += other.flops * mult
+        self.bytes += other.bytes * mult
+        for k, v in other.collective_bytes.items():
+            self.collective_bytes[k] = self.collective_bytes.get(k, 0) + v * mult
+        for k, v in other.collective_count.items():
+            self.collective_count[k] = self.collective_count.get(k, 0) + v * mult
+
+    @property
+    def total_collective_bytes(self) -> float:
+        return sum(self.collective_bytes.values())
+
+    def as_dict(self) -> dict:
+        return {"flops": self.flops, "bytes": self.bytes,
+                "collective_bytes": dict(self.collective_bytes),
+                "collective_count": dict(self.collective_count),
+                "total_collective_bytes": self.total_collective_bytes}
+
+
+def _operand_bytes(op: Op, comp: Computation) -> float:
+    total = 0.0
+    for o in op.operands:
+        sym = comp.symbols.get(o)
+        if sym is not None:
+            total += sym[0]
+    return total
+
+
+# Ops that read only a slice/selection of their (possibly huge, loop-
+# invariant) operand: charging full operand bytes per while-iteration would
+# wildly overcount HBM traffic (e.g. scan-over-layers dynamic-slicing one
+# layer from the stacked params). Charge result-sized reads instead.
+_SLICE_READ_KINDS = {"dynamic-slice", "gather", "slice"}
+
+
+def _op_bytes(op: Op, comp: Computation) -> float:
+    if op.kind in _SLICE_READ_KINDS:
+        return 2.0 * op.result_bytes               # read slice + write result
+    if op.kind == "dynamic-update-slice":
+        # in-place update: read+write the updated region only
+        upd = comp.symbols.get(op.operands[1]) if len(op.operands) > 1 else None
+        upd_bytes = upd[0] if upd else op.result_bytes
+        return 2.0 * upd_bytes
+    return op.result_bytes + _operand_bytes(op, comp)
+
+
+def _fusion_bytes(op: Op, comp: Computation, comps: dict) -> float:
+    """HBM traffic of a fusion = result + per-parameter reads, where a
+    parameter whose only inner uses are dynamic-slice/gather is charged at
+    the sliced size (the DMA reads only the slice)."""
+    called = [c for c in op.called if c in comps]
+    if not called:
+        return op.result_bytes + _operand_bytes(op, comp)
+    inner = comps[called[0]]
+    # map parameter index -> param op name
+    param_names = {}
+    for iop in inner.ops:
+        if iop.kind == "parameter":
+            m = re.search(r"parameter\((\d+)\)", iop.attrs)
+            if m:
+                param_names[iop.name] = int(m.group(1))
+    sliced_reads: dict[str, float] = {}
+    full_read: set[str] = set()
+    for iop in inner.ops:
+        for o in iop.operands:
+            if o not in param_names:
+                continue
+            if iop.kind in _SLICE_READ_KINDS and iop.operands and \
+                    iop.operands[0] == o:
+                sliced_reads[o] = sliced_reads.get(o, 0.0) + iop.result_bytes
+            else:
+                full_read.add(o)
+    total = op.result_bytes
+    for pname, pidx in param_names.items():
+        if pidx >= len(op.operands):
+            continue
+        sym = comp.symbols.get(op.operands[pidx])
+        full = sym[0] if sym else 0.0
+        if pname in full_read or pname not in sliced_reads:
+            total += full
+        else:
+            total += min(full, sliced_reads[pname])
+    return total
+
+
+def cost_computation(name: str, comps: dict, memo: dict,
+                     flops_only: bool = False) -> Cost:
+    if (name, flops_only) in memo:
+        return memo[(name, flops_only)]
+    comp = comps[name]
+    c = Cost()
+    for op in comp.ops:
+        kind = op.kind
+        if kind == "dot":
+            c.flops += _dot_flops(op, comp)
+        elif kind == "convolution":
+            c.flops += _conv_flops(op, comp)
+        if kind == "while":
+            trips = _trip_count(op)
+            body = [n for n in op.called if "region" in n or "body" in n
+                    or n in comps]
+            for b in op.called:
+                if b in comps:
+                    c.add(cost_computation(b, comps, memo, flops_only), trips)
+            continue
+        if kind in ("fusion", "call", "conditional", "sort", "map",
+                    "reduce", "reduce-window", "scatter", "select-and-scatter",
+                    "custom-call", "async-start"):
+            # descend for flops (dots can live inside fusions); bytes are
+            # charged at this op's boundary (one memory pass per fusion)
+            for b in op.called:
+                if b in comps:
+                    sub = cost_computation(b, comps, memo, flops_only=True)
+                    c.flops += sub.flops
+                    # collectives never live inside fusions; whiles neither
+        if not flops_only and kind not in _SKIP_BYTES_KINDS:
+            if kind == "fusion":
+                c.bytes += _fusion_bytes(op, comp, comps)
+            else:
+                c.bytes += _op_bytes(op, comp)
+        if kind in _COLLECTIVES or any(kind.startswith(x + "-start")
+                                       for x in _COLLECTIVES):
+            base = kind.replace("-start", "")
+            c.collective_bytes[base] = (c.collective_bytes.get(base, 0.0)
+                                        + op.result_bytes)
+            c.collective_count[base] = c.collective_count.get(base, 0) + 1
+    memo[(name, flops_only)] = c
+    return c
+
+
+def module_cost(hlo_text: str) -> Cost:
+    """Per-device trip-count-corrected cost of a compiled SPMD module."""
+    comps, entry = parse_module(hlo_text)
+    return cost_computation(entry, comps, memo={})
+
+
+# ---------------------------------------------------------------------------
+# Region attribution: split costs by HLO metadata op_name patterns
+# ---------------------------------------------------------------------------
+
+def region_cost(name: str, comps: dict, patterns: dict, memo: dict) -> dict:
+    """Like cost_computation but bucketing (flops, bytes, collective_bytes)
+    per region; an op belongs to the first pattern matching its op_name
+    metadata, else '_other'. While bodies multiply by trip count."""
+    key = (name,)
+    if key in memo:
+        return memo[key]
+    comp = comps[name]
+    buckets: dict[str, Cost] = {}
+
+    def bucket_for(op: Op) -> str:
+        meta = op.op_name_meta
+        for tag, pat in patterns.items():
+            if re.search(pat, meta):
+                return tag
+        return "_other"
+
+    def add(tag, **kw):
+        c = buckets.setdefault(tag, Cost())
+        c.flops += kw.get("flops", 0.0)
+        c.bytes += kw.get("bytes", 0.0)
+        for k, v in kw.get("coll", {}).items():
+            c.collective_bytes[k] = c.collective_bytes.get(k, 0) + v
+
+    for op in comp.ops:
+        tag = bucket_for(op)
+        if op.kind == "dot":
+            add(tag, flops=_dot_flops(op, comp))
+        elif op.kind == "convolution":
+            add(tag, flops=_conv_flops(op, comp))
+        if op.kind == "while":
+            trips = _trip_count(op)
+            for b in op.called:
+                if b in comps:
+                    sub = region_cost(b, comps, patterns, memo)
+                    for t, c in sub.items():
+                        add(t, flops=c.flops * trips, bytes=c.bytes * trips,
+                            coll={k: v * trips
+                                  for k, v in c.collective_bytes.items()})
+            continue
+        if op.kind in ("fusion", "call", "conditional", "sort", "map",
+                       "reduce", "reduce-window", "scatter",
+                       "select-and-scatter", "custom-call", "async-start"):
+            for b in op.called:
+                if b in comps:
+                    sub = cost_computation(b, comps, {}, flops_only=True)
+                    add(tag, flops=sub.flops)
+        if op.kind not in _SKIP_BYTES_KINDS:
+            if op.kind == "fusion":
+                add(tag, bytes=_fusion_bytes(op, comp, comps))
+            else:
+                add(tag, bytes=_op_bytes(op, comp))
+        if op.kind in _COLLECTIVES or any(op.kind.startswith(x + "-start")
+                                          for x in _COLLECTIVES):
+            base = op.kind.replace("-start", "")
+            add(tag, coll={base: op.result_bytes})
+    memo[key] = buckets
+    return buckets
+
+
+def module_region_cost(hlo_text: str, patterns: dict) -> dict:
+    comps, entry = parse_module(hlo_text)
+    return region_cost(entry, comps, patterns, memo={})

@@ -1,0 +1,15 @@
+"""Serving-side cache utilities (thin wrappers over model init_cache)."""
+from __future__ import annotations
+
+import jax
+
+from repro.models.transformer import Model
+
+
+def cache_spec(model: Model, batch: int, seq_len: int):
+    """ShapeDtypeStruct pytree of the decode cache (no allocation)."""
+    return jax.eval_shape(lambda: model.init_cache(batch, seq_len))
+
+
+def cache_bytes(spec) -> int:
+    return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(spec))

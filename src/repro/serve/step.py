@@ -1,0 +1,57 @@
+"""serve_step factories: prefill and decode.
+
+``decode_32k`` / ``long_500k`` dry-run cells lower ``serve_step`` — one new
+token against a seq_len-deep cache — per the assignment. Greedy sampling is
+the default; the sampler is pluggable (temperature / top-k live here, not in
+the model).
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.transformer import Model
+
+
+def make_prefill_step(model: Model) -> Callable:
+    def prefill_step(params, batch):
+        """Full-sequence forward; logits only for the last position (the
+        full (B, S, vocab) logits tensor is never materialized — it would be
+        petabyte-scale at 32k x 256k vocab)."""
+        hidden, aux = model.apply_hidden(params, batch)
+        return model.head(params, hidden[:, -1:])[:, 0], aux
+    return prefill_step
+
+
+def make_decode_step(model: Model, temperature: float = 0.0) -> Callable:
+    def decode_step(params, inputs, cache, pos, rng=None):
+        """inputs: (B, 1) ids (or (B, 1, d) frontend embeddings)."""
+        logits, cache = model.decode_step(params, inputs, cache, pos)
+        logits = logits[:, 0]
+        if temperature > 0.0 and rng is not None:
+            tok = jax.random.categorical(rng, logits / temperature, axis=-1)
+        else:
+            tok = jnp.argmax(logits, axis=-1)
+        return tok.astype(jnp.int32), logits, cache
+    return decode_step
+
+
+def generate(model: Model, params, prompt, steps: int,
+             temperature: float = 0.0, rng=None):
+    """Simple batched greedy/sampled generation loop (examples/serving)."""
+    b, s = prompt.shape
+    cache = model.init_cache(b, s + steps)
+    decode = jax.jit(make_decode_step(model, temperature))
+    # prefill by stepping the prompt (simple; prefill kernel is in step.py)
+    tok = None
+    for t in range(s):
+        tok, logits, cache = decode(params, prompt[:, t:t + 1], cache,
+                                    jnp.int32(t), rng)
+    out = [tok]
+    for t in range(s, s + steps - 1):
+        tok, logits, cache = decode(params, out[-1][:, None], cache,
+                                    jnp.int32(t), rng)
+        out.append(tok)
+    return jnp.stack(out, axis=1)

@@ -1,0 +1,41 @@
+"""Sparse op dispatch: Pallas kernel vs pure-jnp reference.
+
+``sparse_matmul(x, w)`` is the serving-path matmul on compressed weights.
+Backend selection:
+  'pallas'    — the TPU kernel (interpret mode on CPU),
+  'ref'       — densify + jnp (oracle; also the fastest choice on CPU),
+  'auto'      — pallas on TPU, ref elsewhere.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.bsr_spmm import ops as kops
+from repro.sparse.formats import BlockCSR
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def sparse_matmul(x, w: BlockCSR, backend: str = "auto"):
+    """y = x @ w.T for BlockCSR w (paper forward dense x compressed')."""
+    if backend == "auto":
+        backend = "pallas" if _on_tpu() else "ref"
+    if backend == "pallas":
+        return kops.spmm_ad(x, w)
+    if backend == "ref":
+        return kops.spmm_fwd_ref(x, w).astype(x.dtype)
+    raise ValueError(backend)
+
+
+def sparse_matmul_t(dy, w: BlockCSR, backend: str = "auto"):
+    """dx = dy @ w (paper backward dense x compressed)."""
+    if backend == "auto":
+        backend = "pallas" if _on_tpu() else "ref"
+    if backend == "pallas":
+        return kops.spmm_t(dy, w)
+    if backend == "ref":
+        return kops.spmm_bwd_ref(dy, w).astype(dy.dtype)
+    raise ValueError(backend)

@@ -1,0 +1,129 @@
+"""Fault-tolerant training loop + the paper's SpC -> debias pipeline.
+
+Responsibilities:
+  * checkpoint/restart: resumes from the newest complete checkpoint; data is
+    re-derived from (seed, step) so replay is exact (no loader state),
+  * preemption safety: checkpoints are atomic (checkpoint/checkpointer.py)
+    and written every ``ckpt_every`` steps + at exit,
+  * straggler/failure model: SPMD training is synchronous — a lost host is
+    handled by restart-from-checkpoint, optionally onto a *smaller or larger
+    mesh* (elastic re-shard at restore). A watchdog records step wall-times
+    and flags stragglers (> k*median) for the operator,
+  * compression pipeline: ``run_spc_pipeline`` = sparse-coding training then
+    mask-frozen debias retraining (paper §2.4), each phase resumable.
+"""
+from __future__ import annotations
+
+import dataclasses
+import logging
+import time
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.checkpointer import Checkpointer
+from repro.core import masks as masks_lib
+from repro.core import metrics as metrics_lib
+from repro.core.optimizers import ProxOptimizer
+from repro.train.state import TrainState
+
+log = logging.getLogger("repro.train")
+
+
+@dataclasses.dataclass
+class LoopConfig:
+    total_steps: int
+    ckpt_every: int = 200
+    log_every: int = 20
+    straggler_factor: float = 3.0
+
+
+class StragglerWatchdog:
+    """Flags abnormally slow steps (operator signal; sync SPMD can't skip)."""
+
+    def __init__(self, factor: float = 3.0, window: int = 50):
+        self.times: list[float] = []
+        self.factor = factor
+        self.window = window
+        self.flagged: list[tuple[int, float]] = []
+
+    def record(self, step: int, dt: float):
+        self.times.append(dt)
+        hist = self.times[-self.window:]
+        if len(hist) >= 10:
+            med = float(np.median(hist))
+            if dt > self.factor * med:
+                self.flagged.append((step, dt))
+                log.warning("straggler: step %d took %.3fs (median %.3fs)",
+                            step, dt, med)
+
+
+def train_loop(train_step: Callable,
+               state: TrainState,
+               batch_fn: Callable[[int], dict],
+               loop_cfg: LoopConfig,
+               checkpointer: Optional[Checkpointer] = None,
+               metrics_cb: Optional[Callable[[int, dict], None]] = None):
+    """Run (and resume) one training phase. Returns (state, history)."""
+    start = int(state.step)
+    if checkpointer is not None:
+        latest = checkpointer.latest_step()
+        if latest is not None and latest > start:
+            log.info("resuming from checkpoint step %d", latest)
+            state = checkpointer.restore(latest, state)
+            start = int(state.step)
+
+    watchdog = StragglerWatchdog(loop_cfg.straggler_factor)
+    history: list[dict] = []
+
+    for step in range(start, loop_cfg.total_steps):
+        t0 = time.perf_counter()
+        batch = batch_fn(step)
+        state, metrics = train_step(state, batch)
+        if step % loop_cfg.log_every == 0 or step == loop_cfg.total_steps - 1:
+            metrics = {k: float(v) for k, v in metrics.items()}
+            metrics["step"] = step
+            history.append(metrics)
+            if metrics_cb:
+                metrics_cb(step, metrics)
+        watchdog.record(step, time.perf_counter() - t0)
+
+        if checkpointer is not None and (step + 1) % loop_cfg.ckpt_every == 0:
+            checkpointer.save(int(state.step), state)
+
+    if checkpointer is not None:
+        checkpointer.save(int(state.step), state)
+    return state, history
+
+
+def run_spc_pipeline(params,
+                     make_train_step: Callable[[ProxOptimizer], Callable],
+                     opt_spc: ProxOptimizer,
+                     opt_debias: ProxOptimizer,
+                     batch_fn: Callable[[int], dict],
+                     spc_steps: int,
+                     debias_steps: int = 0,
+                     checkpointer: Optional[Checkpointer] = None,
+                     log_every: int = 50):
+    """The paper's full pipeline (§2): SpC training, then debias retraining
+    with the zero mask frozen and regularization off. Returns
+    (final_state, spc_history, debias_history, compression_report)."""
+    step_spc = make_train_step(opt_spc)
+    state = TrainState.create(params, opt_spc)
+    cfg = LoopConfig(total_steps=spc_steps, log_every=log_every)
+    state, hist_spc = train_loop(step_spc, state, batch_fn, cfg, checkpointer)
+    report = {"spc": metrics_lib.total_compression(state.params)}
+
+    hist_db: list[dict] = []
+    if debias_steps:
+        mask = masks_lib.zero_mask(state.params)
+        state = TrainState(params=state.params,
+                           opt_state=opt_debias.init(state.params),
+                           mask=mask, step=jnp.zeros((), jnp.int32))
+        step_db = make_train_step(opt_debias)
+        cfg = LoopConfig(total_steps=debias_steps, log_every=log_every)
+        state, hist_db = train_loop(step_db, state, batch_fn, cfg, None)
+        report["debias"] = metrics_lib.total_compression(state.params)
+    return state, hist_spc, hist_db, report

@@ -1,0 +1,25 @@
+"""Training losses."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def next_token_loss(logits, labels, z_weight: float = 1e-4):
+    """Causal LM loss: predict labels[t] from logits[t] (labels are already
+    shifted by the data pipeline). Adds a small logit z-loss for stability."""
+    logits = logits.astype(jnp.float32)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    z = jnp.mean(jnp.square(jax.nn.logsumexp(logits, axis=-1)))
+    return jnp.mean(nll) + z_weight * z
+
+
+def softmax_xent(logits, labels):
+    """Classification loss for the paper's CNN experiments."""
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    return -jnp.mean(jnp.take_along_axis(logp, labels[:, None], axis=-1))
+
+
+def accuracy(logits, labels):
+    return jnp.mean((jnp.argmax(logits, axis=-1) == labels).astype(jnp.float32))

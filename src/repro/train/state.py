@@ -1,0 +1,30 @@
+"""TrainState pytree: params + prox-optimizer state + debias mask."""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.optimizers import ProxOptimizer, ProxState
+
+PyTree = Any
+
+
+@partial(jax.tree_util.register_dataclass,
+         data_fields=["params", "opt_state", "mask", "step"],
+         meta_fields=[])
+@dataclasses.dataclass
+class TrainState:
+    params: PyTree
+    opt_state: ProxState
+    mask: Optional[PyTree]      # debias mask (None until retraining phase)
+    step: jax.Array
+
+    @classmethod
+    def create(cls, params: PyTree, opt: ProxOptimizer,
+               mask: Optional[PyTree] = None) -> "TrainState":
+        return cls(params=params, opt_state=opt.init(params), mask=mask,
+                   step=jnp.zeros((), jnp.int32))

@@ -1,0 +1,98 @@
+"""Integration tests: full SpC pipeline end-to-end, serving generation,
+paper CNN training, sparse serving path."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import metrics as metrics_lib
+from repro.core.optimizers import prox_adam
+from repro.data.synthetic import TokenStreamConfig, token_batch
+from repro.models.cnn import CNN_ZOO
+from repro.models.model_zoo import build
+from repro.models.layers import apply_mlp, init_mlp
+from repro.serve.step import generate, make_prefill_step
+from repro.sparse.formats import dense_to_bcsr
+from repro.train.loop import run_spc_pipeline
+from repro.train.step import make_train_step
+
+
+def test_spc_pipeline_lm_end_to_end():
+    """Paper pipeline on a reduced LM: loss falls, compression happens,
+    debias keeps the mask and recovers loss."""
+    model = build("smollm-360m", reduced=True, remat=False)
+    cfg = model.cfg
+    data = TokenStreamConfig(vocab=cfg.vocab, seq_len=32, global_batch=4)
+    params = model.init(jax.random.PRNGKey(0))
+
+    def make_step(opt):
+        return jax.jit(make_train_step(model, opt))
+
+    state, hist, hist_db, report = run_spc_pipeline(
+        params, make_step,
+        opt_spc=prox_adam(3e-3, lam=2.0),
+        opt_debias=prox_adam(3e-3, lam=0.0),
+        batch_fn=lambda s: token_batch(data, s),
+        spc_steps=40, debias_steps=15, log_every=10)
+
+    assert hist[-1]["loss"] < hist[0]["loss"]
+    assert report["spc"]["compression_rate"] > 0.3
+    # debias must not change the zero pattern
+    assert report["debias"]["nnz"] == report["spc"]["nnz"]
+    # debias loss should not be worse than end of SpC by much
+    assert hist_db[-1]["loss"] < hist[-1]["loss"] + 0.5
+
+
+def test_generate_produces_tokens():
+    model = build("smollm-360m", reduced=True, remat=False)
+    params = model.init(jax.random.PRNGKey(0))
+    prompt = jax.random.randint(jax.random.PRNGKey(1), (2, 4), 0,
+                                model.cfg.vocab)
+    out = generate(model, params, prompt, steps=6)
+    assert out.shape == (2, 6)
+    assert int(jnp.max(out)) < model.cfg.vocab
+
+
+def test_prefill_matches_last_position_logits():
+    model = build("qwen3-0.6b", reduced=True, remat=False)
+    params = model.init(jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0,
+                              model.cfg.vocab)
+    full, _ = jax.jit(model.apply_train)(params, {"inputs": toks})
+    last, _ = jax.jit(make_prefill_step(model))(params, {"inputs": toks})
+    np.testing.assert_allclose(np.asarray(last), np.asarray(full[:, -1]),
+                               atol=1e-4, rtol=1e-4)
+
+
+@pytest.mark.parametrize("name", ["lenet5", "resnet32-cifar"])
+def test_cnn_trains(name):
+    from benchmarks.common import data_for, evaluate_cnn, train_cnn
+    model = CNN_ZOO[name]
+    params, hist = train_cnn(model, prox_adam(1e-3, lam=0.0), steps=30,
+                             eval_every=30, batch=32)
+    assert np.isfinite(hist[-1]["loss"])
+
+
+def test_sparse_serving_path_matches_dense():
+    """apply_mlp with BCSR weights == dense apply (paper serving path)."""
+    key = jax.random.PRNGKey(0)
+    p = init_mlp(key, 64, 128, gated=True)
+    # sparsify wi at block granularity
+    wi = np.array(p["wi"])          # writable copy
+    wi[:32, :] = 0.0
+    p["wi"] = jnp.asarray(wi)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 4, 64))
+    dense = apply_mlp(p, x, "silu", True)
+    sp = {"wi": dense_to_bcsr(wi.T, block=(32, 32))}   # stored (out, in)
+    sparse = apply_mlp(p, x, "silu", True, sparse_weights=sp)
+    np.testing.assert_allclose(np.asarray(dense), np.asarray(sparse),
+                               atol=1e-4, rtol=1e-3)
+
+
+def test_model_size_accounting():
+    params = {"w": jnp.zeros((100, 100)).at[:10, :10].set(1.0)}
+    from repro.core.metrics import model_size_bytes
+    dense = model_size_bytes(params, sparse=False)
+    sparse = model_size_bytes(params, sparse=True)
+    assert dense == 100 * 100 * 4
+    assert sparse == 100 * (4 + 4) + 101 * 4

@@ -1,0 +1,72 @@
+"""Flash-attention Pallas kernel vs oracle: shape/dtype/GQA/window sweeps
+(interpret mode on CPU; TPU is the target)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention.ops import (flash_attention,
+                                               flash_attention_ref)
+from repro.models.attention import chunked_attention
+
+
+def _ref(q, k, v, causal, window):
+    b, s, h, hd = q.shape
+    kv = k.shape[2]
+    qf = q.transpose(0, 2, 1, 3).reshape(b * h, s, hd)
+    kf = k.transpose(0, 2, 1, 3).reshape(b * kv, s, hd)
+    vf = v.transpose(0, 2, 1, 3).reshape(b * kv, s, hd)
+    o = flash_attention_ref(qf, kf, vf, causal=causal, window=window)
+    return o.reshape(b, h, s, hd).transpose(0, 2, 1, 3)
+
+
+@pytest.mark.parametrize("b,s,h,kv,hd", [
+    (2, 64, 4, 2, 32), (1, 128, 4, 1, 16), (2, 64, 4, 4, 32),
+    (1, 64, 8, 2, 64),
+])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_matches_oracle(b, s, h, kv, hd, causal):
+    rng = np.random.default_rng(hash((b, s, h, kv, hd, causal)) % 2**31)
+    q = jnp.asarray(rng.normal(size=(b, s, h, hd)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(b, s, kv, hd)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(b, s, kv, hd)), jnp.float32)
+    got = flash_attention(q, k, v, causal=causal, bq=16, bk=16)
+    want = _ref(q, k, v, causal, None)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-5, rtol=1e-4)
+
+
+@pytest.mark.parametrize("window", [16, 32])
+def test_flash_sliding_window(window):
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.normal(size=(1, 128, 2, 16)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(1, 128, 2, 16)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(1, 128, 2, 16)), jnp.float32)
+    got = flash_attention(q, k, v, causal=True, window=window, bq=32, bk=32)
+    want = _ref(q, k, v, True, window)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-5, rtol=1e-4)
+
+
+def test_flash_bf16():
+    rng = np.random.default_rng(1)
+    q = jnp.asarray(rng.normal(size=(1, 64, 2, 32)), jnp.bfloat16)
+    k = jnp.asarray(rng.normal(size=(1, 64, 2, 32)), jnp.bfloat16)
+    v = jnp.asarray(rng.normal(size=(1, 64, 2, 32)), jnp.bfloat16)
+    got = flash_attention(q, k, v, bq=16, bk=16)
+    want = _ref(q.astype(jnp.float32), k.astype(jnp.float32),
+                v.astype(jnp.float32), True, None)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want), atol=0.05, rtol=0.05)
+
+
+def test_flash_matches_streaming_jnp_attention():
+    """The kernel and the model's chunked_attention are interchangeable."""
+    rng = np.random.default_rng(2)
+    q = jnp.asarray(rng.normal(size=(2, 64, 4, 16)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(2, 64, 2, 16)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(2, 64, 2, 16)), jnp.float32)
+    a = flash_attention(q, k, v, bq=16, bk=16)
+    b = chunked_attention(q, k, v, causal=True, q_chunk=16, kv_chunk=16)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               atol=2e-5, rtol=1e-4)

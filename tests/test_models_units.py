@@ -1,0 +1,242 @@
+"""Unit tests for model building blocks: chunked attention vs naive,
+RG-LRU scan vs step recurrence, RWKV chunked vs stepwise, MoE dispatch."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import rglru, rwkv6
+from repro.models.attention import chunked_attention
+from repro.models.layers import apply_rope
+
+
+def naive_attention(q, k, v, causal=True, window=None):
+    b, s, h, hd = q.shape
+    kv = k.shape[2]
+    g = h // kv
+    qg = q.reshape(b, s, kv, g, hd)
+    scores = jnp.einsum("bskgh,btkh->bkgst", qg, k) * hd ** -0.5
+    qpos = jnp.arange(s)[:, None]
+    kpos = jnp.arange(s)[None, :]
+    mask = jnp.ones((s, s), bool)
+    if causal:
+        mask &= qpos >= kpos
+    if window is not None:
+        mask &= (qpos - kpos) < window
+    scores = jnp.where(mask, scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgst,btkh->bskgh", p, v)
+    return out.reshape(b, s, h, hd)
+
+
+@pytest.mark.parametrize("h,kv", [(4, 4), (4, 2), (4, 1)])
+@pytest.mark.parametrize("window", [None, 8])
+def test_chunked_attention_matches_naive(h, kv, window):
+    rng = np.random.default_rng(0)
+    b, s, hd = 2, 32, 16
+    q = jnp.asarray(rng.normal(size=(b, s, h, hd)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(b, s, kv, hd)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(b, s, kv, hd)), jnp.float32)
+    got = chunked_attention(q, k, v, causal=True, window=window,
+                            q_chunk=8, kv_chunk=8)
+    want = naive_attention(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-5, rtol=1e-4)
+
+
+def test_chunked_attention_grads_finite():
+    rng = np.random.default_rng(1)
+    q = jnp.asarray(rng.normal(size=(1, 16, 2, 8)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(1, 16, 2, 8)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(1, 16, 2, 8)), jnp.float32)
+    g = jax.grad(lambda q_: jnp.sum(
+        chunked_attention(q_, k, v, q_chunk=8, kv_chunk=8) ** 2))(q)
+    assert bool(jnp.all(jnp.isfinite(g)))
+
+
+def test_rope_rotation_preserves_norm():
+    rng = np.random.default_rng(2)
+    x = jnp.asarray(rng.normal(size=(1, 8, 2, 16)), jnp.float32)
+    pos = jnp.broadcast_to(jnp.arange(8), (1, 8))
+    y = apply_rope(x, pos, 10000.0)
+    np.testing.assert_allclose(np.linalg.norm(np.asarray(y), axis=-1),
+                               np.linalg.norm(np.asarray(x), axis=-1),
+                               rtol=1e-5)
+    # relative property: <rope(q,i), rope(k,j)> depends only on i-j
+    q = jnp.asarray(rng.normal(size=(1, 1, 1, 16)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(1, 1, 1, 16)), jnp.float32)
+
+    def dot_at(i, j):
+        qi = apply_rope(q, jnp.full((1, 1), i), 10000.0)
+        kj = apply_rope(k, jnp.full((1, 1), j), 10000.0)
+        return float(jnp.sum(qi * kj))
+
+    assert dot_at(3, 1) == pytest.approx(dot_at(7, 5), rel=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU
+# ---------------------------------------------------------------------------
+
+def test_rglru_scan_matches_stepwise():
+    cfg = get_config("recurrentgemma-9b").reduced()
+    key = jax.random.PRNGKey(0)
+    p = rglru.init_rglru(key, cfg)
+    rng = np.random.default_rng(3)
+    w = cfg.lru_width
+    u = jnp.asarray(rng.normal(size=(2, 10, w)), jnp.float32)
+    h_scan, h_last = rglru.rglru_scan(p, u)
+    h = jnp.zeros((2, w), jnp.float32)
+    for t in range(10):
+        out, h = rglru.rglru_step(p, u[:, t:t + 1], h)
+        np.testing.assert_allclose(np.asarray(out[:, 0]),
+                                   np.asarray(h_scan[:, t]),
+                                   atol=1e-5, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(h), np.asarray(h_last), atol=1e-5)
+
+
+def test_rglru_scan_with_initial_state():
+    cfg = get_config("recurrentgemma-9b").reduced()
+    p = rglru.init_rglru(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(4)
+    w = cfg.lru_width
+    u = jnp.asarray(rng.normal(size=(1, 8, w)), jnp.float32)
+    # split sequence: scan(first half) -> state -> scan(second half)
+    h_all, _ = rglru.rglru_scan(p, u)
+    h_1, last1 = rglru.rglru_scan(p, u[:, :4])
+    h_2, _ = rglru.rglru_scan(p, u[:, 4:], h0=last1)
+    np.testing.assert_allclose(np.asarray(h_2), np.asarray(h_all[:, 4:]),
+                               atol=1e-5, rtol=1e-4)
+
+
+def test_rglru_decay_bounded():
+    """|a_t| < 1 always: the recurrence is contractive (stability)."""
+    cfg = get_config("recurrentgemma-9b").reduced()
+    p = rglru.init_rglru(jax.random.PRNGKey(0), cfg)
+    u = jnp.asarray(np.random.default_rng(5).normal(size=(1, 4, cfg.lru_width))
+                    * 10, jnp.float32)
+    a, _ = rglru._rglru_coeffs(p, u)
+    assert float(jnp.max(a)) < 1.0
+    assert float(jnp.min(a)) > 0.0
+
+
+# ---------------------------------------------------------------------------
+# RWKV-6
+# ---------------------------------------------------------------------------
+
+def test_rwkv_chunked_matches_stepwise():
+    rng = np.random.default_rng(6)
+    b, s, h, hd = 2, 16, 2, 8
+    r, k, v = (jnp.asarray(rng.normal(size=(b, s, h, hd)), jnp.float32)
+               for _ in range(3))
+    logw = jnp.asarray(-np.abs(rng.normal(size=(b, s, h, hd))) * 0.1,
+                       jnp.float32)
+    u = jnp.asarray(np.abs(rng.normal(size=(h, hd))), jnp.float32)
+
+    o_chunk, s_chunk = rwkv6.chunked_wkv(r, k, v, logw, u, None, chunk=4)
+    state = jnp.zeros((b, h, hd, hd), jnp.float32)
+    for t in range(s):
+        o_t, state = rwkv6.wkv_step(r[:, t:t + 1], k[:, t:t + 1],
+                                    v[:, t:t + 1], logw[:, t:t + 1], u, state)
+        np.testing.assert_allclose(np.asarray(o_t[:, 0]),
+                                   np.asarray(o_chunk[:, t]),
+                                   atol=1e-4, rtol=1e-3)
+    np.testing.assert_allclose(np.asarray(state), np.asarray(s_chunk),
+                               atol=1e-4, rtol=1e-3)
+
+
+def test_rwkv_chunk_invariance():
+    """Output independent of chunk size (chunk math correctness)."""
+    rng = np.random.default_rng(7)
+    b, s, h, hd = 1, 24, 2, 4
+    r, k, v = (jnp.asarray(rng.normal(size=(b, s, h, hd)), jnp.float32)
+               for _ in range(3))
+    logw = jnp.asarray(-np.abs(rng.normal(size=(b, s, h, hd))), jnp.float32)
+    u = jnp.asarray(rng.normal(size=(h, hd)), jnp.float32)
+    o1, s1 = rwkv6.chunked_wkv(r, k, v, logw, u, None, chunk=4)
+    o2, s2 = rwkv6.chunked_wkv(r, k, v, logw, u, None, chunk=8)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# MoE
+# ---------------------------------------------------------------------------
+
+def test_moe_no_drop_equals_dense_mixture():
+    """With capacity >= worst case, MoE output == explicit expert mixture."""
+    from repro.models import moe as moe_lib
+    cfg = get_config("olmoe-1b-7b").reduced()
+    cfg = dataclasses.replace(
+        cfg, moe=dataclasses.replace(cfg.moe,
+                                     capacity_factor=float(cfg.moe.n_experts)))
+    p = moe_lib.init_moe(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(8)
+    x = jnp.asarray(rng.normal(size=(2, 8, cfg.d_model)), jnp.float32)
+    y, aux = moe_lib.apply_moe(p, x, cfg)
+
+    # explicit dense mixture
+    xt = x.reshape(-1, cfg.d_model)
+    logits = xt @ p["router"]
+    probs = jax.nn.softmax(logits, -1)
+    gate, idx = jax.lax.top_k(probs, cfg.moe.top_k)
+    gate = gate / gate.sum(-1, keepdims=True)
+    y_ref = np.zeros_like(np.asarray(xt))
+    for t in range(xt.shape[0]):
+        for j in range(cfg.moe.top_k):
+            e = int(idx[t, j])
+            h = (jax.nn.silu(xt[t] @ p["ewg"][e]) * (xt[t] @ p["ewi"][e]))
+            y_ref[t] += float(gate[t, j]) * np.asarray(h @ p["ewo"][e])
+    np.testing.assert_allclose(np.asarray(y.reshape(-1, cfg.d_model)),
+                               y_ref, atol=1e-3, rtol=1e-3)
+    assert float(aux["load_balance"]) >= 1.0 - 1e-3   # >= 1 by Cauchy-Schwarz
+
+
+def test_moe_capacity_drops_tokens():
+    from repro.models import moe as moe_lib
+    cfg = get_config("olmoe-1b-7b").reduced()
+    cfg = dataclasses.replace(
+        cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=0.25))
+    p = moe_lib.init_moe(jax.random.PRNGKey(0), cfg)
+    x = jnp.asarray(np.random.default_rng(9).normal(size=(2, 32, cfg.d_model)),
+                    jnp.float32)
+    y, _ = moe_lib.apply_moe(p, x, cfg)   # must not crash; some tokens -> 0
+    assert bool(jnp.all(jnp.isfinite(y)))
+
+
+# ---------------------------------------------------------------------------
+# int8 KV cache
+# ---------------------------------------------------------------------------
+
+def test_int8_kv_cache_decode_close_to_fp():
+    """Quantized-cache decode tracks the full-precision decode closely and
+    halves the cache bytes."""
+    import dataclasses as _dc
+    from repro.models.model_zoo import build
+
+    base = get_config("qwen3-0.6b").reduced()
+    m_fp = build(base, remat=False)
+    m_q = build(_dc.replace(base, kv_cache_dtype="int8"), remat=False)
+    key = jax.random.PRNGKey(0)
+    params = m_fp.init(key)
+    b, s = 2, 12
+    toks = jax.random.randint(key, (b, s), 0, base.vocab)
+    c_fp = m_fp.init_cache(b, s)
+    c_q = m_q.init_cache(b, s)
+    bytes_fp = sum(x.size * x.dtype.itemsize
+                   for x in jax.tree.leaves(c_fp))
+    bytes_q = sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(c_q))
+    assert bytes_q < 0.75 * bytes_fp
+
+    step_fp = jax.jit(m_fp.decode_step)
+    step_q = jax.jit(m_q.decode_step)
+    for t in range(s):
+        lf, c_fp = step_fp(params, toks[:, t:t + 1], c_fp, jnp.int32(t))
+        lq, c_q = step_q(params, toks[:, t:t + 1], c_q, jnp.int32(t))
+        # compare top-1 predictions + logit closeness
+        pf = jax.nn.log_softmax(lf[:, 0].astype(jnp.float32))
+        pq = jax.nn.log_softmax(lq[:, 0].astype(jnp.float32))
+        assert float(jnp.max(jnp.abs(pf - pq))) < 0.15

@@ -1,0 +1,90 @@
+"""Unit + property tests for proximal operators (paper §2.2)."""
+import hypothesis
+import hypothesis.extra.numpy as hnp
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import prox
+
+floats = hnp.arrays(np.float32, hnp.array_shapes(min_dims=1, max_dims=3,
+                                                 max_side=32),
+                    elements=st.floats(-100, 100, width=32))
+taus = st.floats(0, 50, width=32)
+
+
+def test_soft_threshold_closed_form():
+    z = jnp.asarray([-3.0, -1.0, -0.5, 0.0, 0.5, 1.0, 3.0])
+    out = prox.soft_threshold(z, 1.0)
+    np.testing.assert_allclose(out, [-2.0, 0.0, 0.0, 0.0, 0.0, 0.0, 2.0])
+
+
+@hypothesis.given(floats, taus)
+@hypothesis.settings(max_examples=50, deadline=None)
+def test_soft_threshold_is_prox_of_l1(z, tau):
+    """prox minimizes 0.5||w-z||^2 + tau*||w||_1: check against the
+    sign/abs closed form."""
+    got = np.asarray(prox.soft_threshold(jnp.asarray(z), tau))
+    want = np.sign(z) * np.maximum(np.abs(z) - tau, 0.0)
+    np.testing.assert_allclose(got, want, atol=1e-5)
+
+
+@hypothesis.given(floats, st.floats(-10, 10, width=32), taus)
+@hypothesis.settings(max_examples=50, deadline=None)
+def test_prox_nonexpansive(z1, shift, tau):
+    """prox operators are 1-Lipschitz (firm nonexpansiveness)."""
+    z2 = z1 + shift * np.sin(np.arange(z1.size, dtype=np.float32)
+                             ).reshape(z1.shape)
+    a = np.asarray(prox.soft_threshold(jnp.asarray(z1), tau))
+    b = np.asarray(prox.soft_threshold(jnp.asarray(z2), tau))
+    assert np.linalg.norm(a - b) <= np.linalg.norm(z1 - z2) + 1e-4
+
+
+@hypothesis.given(floats)
+@hypothesis.settings(max_examples=30, deadline=None)
+def test_prox_zero_tau_is_identity(z):
+    # atol covers denormals: XLA flushes subnormals to zero (FTZ)
+    np.testing.assert_allclose(
+        np.asarray(prox.soft_threshold(jnp.asarray(z), 0.0)), z, atol=1e-37)
+
+
+def test_hard_threshold():
+    z = jnp.asarray([-2.0, -0.5, 0.5, 2.0])
+    np.testing.assert_allclose(prox.hard_threshold(z, 1.0), [-2, 0, 0, 2.0])
+
+
+def test_group_l1_blocks_zeroes_whole_blocks():
+    rng = np.random.default_rng(0)
+    w = jnp.asarray(rng.normal(size=(8, 8), scale=0.1), jnp.float32)
+    out = prox.prox_group_l1_blocks(w, tau=100.0, block=(4, 4))
+    assert np.all(np.asarray(out) == 0)
+    out2 = prox.prox_group_l1_blocks(w, tau=0.0, block=(4, 4))
+    np.testing.assert_allclose(out2, w, rtol=1e-6)
+
+
+def test_group_l1_partial_blocks():
+    w = np.zeros((8, 8), np.float32)
+    w[:4, :4] = 10.0          # strong block survives
+    w[4:, 4:] = 0.01          # weak block dies
+    out = np.asarray(prox.prox_group_l1_blocks(jnp.asarray(w), tau=1.0,
+                                               block=(4, 4)))
+    assert np.all(out[4:, 4:] == 0)
+    assert np.all(out[:4, :4] > 9.0)
+
+
+def test_tree_prox_skips_biases_and_norms():
+    params = {"w": jnp.ones((4, 4)), "bias": jnp.ones((4,)),
+              "norm": {"scale": jnp.ones((4,))}}
+    out = prox.tree_prox(params, 10.0)
+    assert np.all(np.asarray(out["w"]) == 0)
+    assert np.all(np.asarray(out["bias"]) == 1)
+    assert np.all(np.asarray(out["norm"]["scale"]) == 1)
+
+
+def test_elastic_net_shrinks_more():
+    z = jnp.asarray([[5.0]])
+    l1 = prox.soft_threshold(z, 1.0)
+    en = prox.prox_elastic_net(z, 1.0, 1.0)
+    assert float(en[0, 0]) == pytest.approx(float(l1[0, 0]) / 2.0)

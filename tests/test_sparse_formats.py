@@ -1,0 +1,69 @@
+"""BCSR / CSR format tests: roundtrips + hypothesis property sweeps."""
+import hypothesis
+import hypothesis.strategies as st
+import jax.numpy as jnp
+import numpy as np
+
+from repro.sparse.formats import (bcsr_density, bcsr_to_dense, csr_to_dense,
+                                  dense_to_bcsr, dense_to_csr)
+
+
+def _random_block_sparse(rng, rows, cols, block, density):
+    br, bc = block
+    R, C = -(-rows // br), -(-cols // bc)
+    w = np.zeros((R * br, C * bc), np.float32)
+    for i in range(R):
+        for j in range(C):
+            if rng.random() < density:
+                w[i * br:(i + 1) * br, j * bc:(j + 1) * bc] = rng.normal(
+                    size=(br, bc))
+    return w[:rows, :cols]
+
+
+@hypothesis.given(
+    st.integers(1, 5), st.integers(1, 5),
+    st.sampled_from([(8, 8), (8, 16), (16, 8)]),
+    st.floats(0.0, 1.0), st.integers(0, 2**31 - 1))
+@hypothesis.settings(max_examples=40, deadline=None)
+def test_bcsr_roundtrip_property(rb, cb, block, density, seed):
+    rng = np.random.default_rng(seed)
+    rows, cols = rb * block[0], cb * block[1]
+    w = _random_block_sparse(rng, rows, cols, block, density)
+    m = dense_to_bcsr(w, block)
+    back = np.asarray(bcsr_to_dense(m))[:rows, :cols]
+    np.testing.assert_array_equal(back, w)
+    assert 0 <= bcsr_density(m) <= 1
+
+
+def test_bcsr_nonmultiple_shape_pads():
+    rng = np.random.default_rng(1)
+    w = rng.normal(size=(13, 21)).astype(np.float32)
+    m = dense_to_bcsr(w, (8, 8))
+    assert m.shape == (13, 21)
+    back = np.asarray(bcsr_to_dense(m))[:13, :21]
+    np.testing.assert_array_equal(back, w)
+
+
+def test_bcsr_all_zero():
+    m = dense_to_bcsr(np.zeros((16, 16), np.float32), (8, 8))
+    assert m.n_blocks == 0
+    assert np.all(np.asarray(bcsr_to_dense(m)) == 0)
+
+
+def test_bcsr_nbytes_smaller_when_sparse():
+    rng = np.random.default_rng(2)
+    w = _random_block_sparse(rng, 128, 128, (8, 8), 0.1)
+    m = dense_to_bcsr(w, (8, 8))
+    assert m.nbytes < w.size * 4 * 0.35
+
+
+@hypothesis.given(st.integers(1, 40), st.integers(1, 40),
+                  st.floats(0, 1), st.integers(0, 2**31 - 1))
+@hypothesis.settings(max_examples=40, deadline=None)
+def test_csr_roundtrip_property(rows, cols, density, seed):
+    rng = np.random.default_rng(seed)
+    w = rng.normal(size=(rows, cols)).astype(np.float32)
+    w[rng.random((rows, cols)) > density] = 0
+    c = dense_to_csr(w)
+    np.testing.assert_array_equal(np.asarray(csr_to_dense(c)), w)
+    assert c.nnz == np.count_nonzero(w)
