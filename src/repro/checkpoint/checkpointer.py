@@ -9,10 +9,14 @@ Properties required by the 1000+-node story (DESIGN.md §5):
   layouts — so a checkpoint written on a (16,16) mesh restores onto (2,16,16)
   or any other mesh (**elastic re-shard**: restore is just pjit-placing the
   host arrays with the new mesh's shardings).
-* **Compressed sparse storage**: regularized weight matrices whose sparsity
-  exceeds a threshold are stored as BCSR (data+indices), cutting checkpoint
-  bytes by the paper's compression factor — the paper's 'model size' win
-  applied to the training artifact itself.
+* **Compressed sparse storage**: regularized *dense* weight matrices whose
+  sparsity exceeds a threshold are stored as elementwise CSR (one-way:
+  densified on restore), cutting checkpoint bytes by the paper's compression
+  factor — the paper's 'model size' win applied to the training artifact.
+  Native **BlockCSR leaves** (e.g. inside a ``CompressedParams`` serving
+  tree) round-trip losslessly: their arrays + metas are stored verbatim and
+  restore rebuilds the BlockCSR without densifying, so a compressed
+  checkpoint restores straight into the compressed-model runtime.
 * **Retention + resume**: keep_n newest checkpoints; ``latest_step`` scans
   the directory so a restarted job resumes from the newest complete write.
 
@@ -31,16 +35,34 @@ import jax
 import numpy as np
 
 from repro.core.prox import default_regularized_predicate
-from repro.sparse.formats import dense_to_csr
+from repro.sparse.formats import BlockCSR, dense_to_csr
 
 PyTree = Any
-_SPARSE_THRESHOLD = 0.7      # store BCSR when >= 70% zero
+_SPARSE_THRESHOLD = 0.7      # store CSR when >= 70% zero
+
+# BlockCSR array fields persisted verbatim for the round-trip path
+_BCSR_FIELDS = ("data", "col_idx", "row_ptr",
+                "gather_idx", "gather_blk", "gather_nnz",
+                "gather_t_idx", "gather_t_blk", "gather_t_nnz")
+
+
+def _is_bcsr(x) -> bool:
+    return isinstance(x, BlockCSR)
+
+
+def _key_name(k) -> str:
+    for attr in ("key", "name", "idx"):
+        if hasattr(k, attr):
+            return str(getattr(k, attr))
+    return str(k)
 
 
 def _flatten(tree: PyTree):
-    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
-    names = ["/".join(str(getattr(k, "key", getattr(k, "idx", k)))
-                      for k in path) for path, _ in flat]
+    """Flatten with BlockCSR treated as a single (compound) leaf, so
+    compressed trees (e.g. ``CompressedParams``) round-trip losslessly."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree,
+                                                         is_leaf=_is_bcsr)
+    names = ["/".join(_key_name(k) for k in path) for path, _ in flat]
     return names, [l for _, l in flat], treedef
 
 
@@ -59,6 +81,19 @@ class Checkpointer:
         arrays, manifest = {}, {"step": step, "time": time.time(),
                                 "extra": extra or {}, "leaves": []}
         for name, leaf in zip(names, leaves):
+            if _is_bcsr(leaf):
+                # native compressed leaf: store the BCSR arrays verbatim —
+                # restore rebuilds the BlockCSR without densifying
+                entry = {"name": name, "format": "bcsr",
+                         "shape": list(leaf.shape),
+                         "block": list(leaf.block),
+                         "n_blocks": int(leaf.n_blocks),
+                         "dtype": str(np.asarray(leaf.data).dtype)}
+                for f in _BCSR_FIELDS:
+                    arrays[f"{name}__{f}"] = np.asarray(
+                        jax.device_get(getattr(leaf, f)))
+                manifest["leaves"].append(entry)
+                continue
             arr = np.asarray(jax.device_get(leaf))
             entry = {"name": name, "shape": list(arr.shape),
                      "dtype": str(arr.dtype), "format": "dense"}
@@ -131,6 +166,9 @@ class Checkpointer:
         out = []
         for name, leaf in zip(names, leaves):
             e = by_name[name]
+            if e["format"] == "bcsr":
+                out.append(_bcsr_restore(npz, name, e))
+                continue
             if e["format"] == "csr":
                 arr = _csr_restore(npz, name, tuple(e["shape"]),
                                    np.dtype(e["dtype"]))
@@ -148,6 +186,20 @@ class Checkpointer:
         with open(os.path.join(self.dir, f"step_{step:09d}",
                                "manifest.json")) as f:
             return json.load(f)
+
+
+def _bcsr_restore(npz, name, entry) -> BlockCSR:
+    """Rebuild a BlockCSR leaf from its stored arrays — no densification.
+
+    The sparsity pattern (and therefore the array shapes) come from the
+    checkpoint, not from the ``like`` template: a compressed checkpoint
+    restores bit-exactly even when the template was compressed from
+    different weights."""
+    import jax.numpy as jnp
+    arrs = {f: jnp.asarray(npz[f"{name}__{f}".replace("/", "|")])
+            for f in _BCSR_FIELDS}
+    return BlockCSR(shape=tuple(entry["shape"]), block=tuple(entry["block"]),
+                    n_blocks=int(entry["n_blocks"]), **arrs)
 
 
 def _csr_restore(npz, name, shape, dtype):

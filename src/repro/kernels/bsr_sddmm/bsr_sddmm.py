@@ -23,6 +23,10 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# jax renamed TPUCompilerParams -> CompilerParams; support both
+_CompilerParams = getattr(pltpu, "CompilerParams",
+                          getattr(pltpu, "TPUCompilerParams", None))
+
 
 def _kernel(rows_ref, cols_ref, dy_ref, x_ref, out_ref, *, n_m):
     m = pl.program_id(1)
@@ -70,7 +74,7 @@ def sddmm_block_grad(dy, x, slot_rows, slot_cols, n_slots: int,
             out_specs=pl.BlockSpec((1, br, bc), out_map),
         ),
         out_shape=jax.ShapeDtypeStruct((n_slots, br, bc), out_dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(slot_rows, slot_cols, dy, x)

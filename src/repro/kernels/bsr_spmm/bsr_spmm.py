@@ -32,6 +32,10 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# jax renamed TPUCompilerParams -> CompilerParams; support both
+_CompilerParams = getattr(pltpu, "CompilerParams",
+                          getattr(pltpu, "TPUCompilerParams", None))
+
 
 def _kernel(nnz_ref, idx_ref, blk_ref,     # scalar-prefetch (SMEM)
             d_ref, w_ref, o_ref,            # VMEM tiles
@@ -103,7 +107,7 @@ def gather_block_matmul(dense, data, idx, blk, nnz, *,
             out_specs=pl.BlockSpec((bm, b_out), o_map),
         ),
         out_shape=jax.ShapeDtypeStruct((M, out_cols), out_dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(nnz, idx, blk, dense, data)

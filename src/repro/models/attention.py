@@ -11,6 +11,12 @@ iteration).
 Decode attention is a single-token product against the cache; for long
 contexts the cache's sequence axis is sharded over the 'model' mesh axis
 (sequence-parallel decode — softmax reductions become cross-chip collectives).
+
+``prefill_attention`` consumes the whole prompt in one forward and fills the
+ring KV cache in a single scatter — one jit dispatch replaces S stepwise
+decodes. All three paths take an optional ``sparse`` dict of BlockCSR
+projections ({"wq"|"wk"|"wv"|"wo": BlockCSR} in (out, in) layout), built by
+``repro.sparse.compress.compress_params`` — the compressed serving runtime.
 """
 from __future__ import annotations
 
@@ -23,6 +29,7 @@ import jax.numpy as jnp
 from repro.configs.base import ModelConfig
 from repro.distributed.sharding import shard_ann
 from repro.models.layers import apply_norm, apply_rope, init_norm, truncated_normal_init
+from repro.sparse import ops as sparse_ops
 
 Array = jax.Array
 NEG_INF = -1e30
@@ -43,11 +50,24 @@ def init_attention(key, cfg: ModelConfig) -> dict:
     return p
 
 
-def _project_qkv(p: dict, x: Array, cfg: ModelConfig, positions: Array):
+def _project_qkv(p: dict, x: Array, cfg: ModelConfig, positions: Array,
+                 sparse: Optional[dict] = None):
+    """QKV projections; entries of ``sparse`` ({"wq": BlockCSR, ...}, stored
+    (heads*hd, d)) take the compressed-kernel path instead of the einsum."""
     dt = x.dtype
-    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(dt))
-    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(dt))
-    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(dt))
+    b, s = x.shape[0], x.shape[1]
+    hd = cfg.resolved_head_dim
+
+    def proj(name, n_out_heads):
+        if sparse and name in sparse:
+            y = sparse_ops.sparse_matmul(x.reshape(-1, x.shape[-1]),
+                                         sparse[name])
+            return y.reshape(b, s, n_out_heads, hd).astype(dt)
+        return jnp.einsum("bsd,dhk->bshk", x, p[name].astype(dt))
+
+    q = proj("wq", cfg.n_heads)
+    k = proj("wk", cfg.n_kv_heads)
+    v = proj("wv", cfg.n_kv_heads)
     if cfg.qk_norm:
         q = apply_norm(p["q_norm"], q, "rmsnorm")
         k = apply_norm(p["k_norm"], k, "rmsnorm")
@@ -152,8 +172,17 @@ def _heads_shardable(cfg: ModelConfig) -> bool:
     return cfg.n_heads % mesh.shape["model"] == 0
 
 
+def _out_proj(p: dict, out: Array, dt, sparse: Optional[dict]) -> Array:
+    """Output projection; sparse["wo"] is stored (d, heads*hd) BCSR."""
+    if sparse and "wo" in sparse:
+        b, s = out.shape[0], out.shape[1]
+        y = sparse_ops.sparse_matmul(out.reshape(b * s, -1), sparse["wo"])
+        return y.reshape(b, s, -1).astype(dt)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(dt))
+
+
 def apply_attention(p: dict, x: Array, cfg: ModelConfig,
-                    positions: Array) -> Array:
+                    positions: Array, sparse: Optional[dict] = None) -> Array:
     """Training / prefill self-attention over a full sequence."""
     # under the seq-parallel residual stream, attention is the only block
     # needing cross-token data: materialize full-seq ONCE here (one gather
@@ -163,10 +192,10 @@ def apply_attention(p: dict, x: Array, cfg: ModelConfig,
     shardable = _heads_shardable(cfg)
     if shardable:
         x = shard_ann(x, ("batch", "seq", "embed"))
-    q, k, v = _project_qkv(p, x, cfg, positions)
+    q, k, v = _project_qkv(p, x, cfg, positions, sparse)
     out = chunked_attention(q, k, v, causal=True, window=cfg.attn_window,
                             seq_shard_fallback=not shardable)
-    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
+    y = _out_proj(p, out, x.dtype, sparse)
     return shard_ann(y, ("batch", "seq", "embed"))
 
 
@@ -205,11 +234,12 @@ def _quantize_heads(x: Array):
 
 
 def decode_attention(p: dict, x: Array, cache: dict, pos: Array,
-                     cfg: ModelConfig) -> tuple[Array, dict]:
+                     cfg: ModelConfig,
+                     sparse: Optional[dict] = None) -> tuple[Array, dict]:
     """x: (B, 1, d); pos: scalar int32 position of the new token."""
     b = x.shape[0]
     positions = jnp.full((b, 1), pos, jnp.int32)
-    q, k_new, v_new = _project_qkv(p, x, cfg, positions)
+    q, k_new, v_new = _project_qkv(p, x, cfg, positions, sparse)
 
     size = cache["k"].shape[1]
     slot = pos % size
@@ -256,5 +286,55 @@ def decode_attention(p: dict, x: Array, cache: dict, pos: Array,
     out = jnp.einsum("bkgc,bckh->bkgh", pattn, v.astype(jnp.float32),
                      preferred_element_type=jnp.float32)
     out = out.reshape(b, 1, h, hd).astype(x.dtype)
-    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
+    y = _out_proj(p, out, x.dtype, sparse)
+    return shard_ann(y, ("batch", "seq", "embed")), new_cache
+
+
+# ---------------------------------------------------------------------------
+# Prefill (full prompt in one forward, cache populated in one write)
+# ---------------------------------------------------------------------------
+
+def _write_prefill_cache(cache: dict, k: Array, v: Array,
+                         cfg: ModelConfig) -> dict:
+    """Scatter the prompt's K/V into the ring cache in one shot.
+
+    Slot for position p is ``p % size`` (decode_attention's ring rule). When
+    the prompt is longer than the ring, only the last ``size`` positions
+    survive — exactly what stepwise decode would have left behind.
+    """
+    size = cache["k"].shape[1]
+    s = k.shape[1]
+    n_keep = min(s, size)
+    slots = (jnp.arange(n_keep) + s - n_keep) % size
+    kk, vv = k[:, s - n_keep:], v[:, s - n_keep:]
+    new = dict(cache)
+    if cfg.kv_cache_dtype == "int8":
+        kq, ks = _quantize_heads(kk)
+        vq, vs = _quantize_heads(vv)
+        new["k"] = cache["k"].at[:, slots].set(kq)
+        new["v"] = cache["v"].at[:, slots].set(vq)
+        new["k_scale"] = cache["k_scale"].at[:, slots].set(ks)
+        new["v_scale"] = cache["v_scale"].at[:, slots].set(vs)
+    else:
+        new["k"] = cache["k"].at[:, slots].set(kk.astype(cache["k"].dtype))
+        new["v"] = cache["v"].at[:, slots].set(vv.astype(cache["v"].dtype))
+    return new
+
+
+def prefill_attention(p: dict, x: Array, cache: dict, positions: Array,
+                      cfg: ModelConfig,
+                      sparse: Optional[dict] = None) -> tuple[Array, dict]:
+    """Full-sequence attention over the prompt that also fills the KV cache.
+
+    One chunked-attention forward replaces S single-token decode dispatches;
+    returns (y, new_cache) with the cache ready for decode at pos = S.
+    """
+    shardable = _heads_shardable(cfg)
+    if shardable:
+        x = shard_ann(x, ("batch", "seq", "embed"))
+    q, k, v = _project_qkv(p, x, cfg, positions, sparse)
+    out = chunked_attention(q, k, v, causal=True, window=cfg.attn_window,
+                            seq_shard_fallback=not shardable)
+    y = _out_proj(p, out, x.dtype, sparse)
+    new_cache = _write_prefill_cache(cache, k, v, cfg)
     return shard_ann(y, ("batch", "seq", "embed")), new_cache

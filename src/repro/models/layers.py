@@ -4,6 +4,12 @@ Functional style: ``init_*`` returns a param dict; ``apply`` fns are pure.
 Logical-axis sharding annotations go through distributed.sharding.shard_ann
 (no-op outside a mesh context). Compute dtype is configurable; params are
 kept in param_dtype (fp32 master weights by default).
+
+``apply_mlp`` and ``apply_head`` take an optional ``sparse_weights`` map of
+BlockCSR matrices in (out, in) layout; present entries dispatch
+``sparse_ops.sparse_matmul`` instead of the dense einsum — the compressed
+serving path (weights built by ``repro.sparse.compress.compress_params``;
+the dense param may then be a zero-size placeholder and is never touched).
 """
 from __future__ import annotations
 
@@ -13,8 +19,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.distributed.sharding import shard_ann
+from repro.sparse import ops as sparse_ops
 from repro.sparse.formats import BlockCSR
-from repro.sparse.ops import sparse_matmul
 
 Array = jax.Array
 
@@ -66,13 +72,22 @@ def apply_embed(p: dict, tokens: Array, compute_dtype) -> Array:
     return shard_ann(x, ("batch", "seq", "embed"))
 
 
-def apply_head(p: dict, x: Array, tie: bool, softcap: Optional[float]) -> Array:
-    w = p["embedding"] if tie else p["head"]
-    # matmul in compute dtype with fp32 accumulation: keeps the (huge)
-    # embedding FSDP gather in bf16 instead of f32 (§Perf iteration C4)
-    w = w.astype(x.dtype)
-    eq = "...d,vd->...v" if tie else "...d,dv->...v"
-    logits = jnp.einsum(eq, x, w, preferred_element_type=jnp.float32)
+def apply_head(p: dict, x: Array, tie: bool, softcap: Optional[float],
+               sparse_weights: Optional[dict[str, BlockCSR]] = None) -> Array:
+    if sparse_weights and "head" in sparse_weights:
+        # compressed serving path: head stored (vocab, d) BCSR. Input goes
+        # up to fp32 so the logits keep the dense branch's fp32 accumulation
+        # (the ref backend returns results in the input dtype).
+        xs = x.reshape(-1, x.shape[-1]).astype(jnp.float32)
+        logits = sparse_ops.sparse_matmul(xs, sparse_weights["head"])
+        logits = logits.reshape(*x.shape[:-1], -1)
+    else:
+        w = p["embedding"] if tie else p["head"]
+        # matmul in compute dtype with fp32 accumulation: keeps the (huge)
+        # embedding FSDP gather in bf16 instead of f32 (§Perf iteration C4)
+        w = w.astype(x.dtype)
+        eq = "...d,vd->...v" if tie else "...d,dv->...v"
+        logits = jnp.einsum(eq, x, w, preferred_element_type=jnp.float32)
     if softcap:
         logits = softcap * jnp.tanh(logits / softcap)
     return shard_ann(logits, ("batch", "seq", "vocab"))
@@ -116,22 +131,22 @@ def apply_mlp(p: dict, x: Array, act: str, gated: bool,
     f = activation(act)
     dt = x.dtype
 
-    def mm(name, h, w, transpose=False):
+    def mm(name, h):
         if sparse_weights and name in sparse_weights:
             # BCSR stores W as (out, in): y = h @ W' via the paper's kernel
             hs = h.reshape(-1, h.shape[-1])
-            y = sparse_matmul(hs, sparse_weights[name])
+            y = sparse_ops.sparse_matmul(hs, sparse_weights[name])
             return y.reshape(*h.shape[:-1], -1).astype(dt)
-        return jnp.einsum("...d,df->...f", h, w.astype(dt))
+        return jnp.einsum("...d,df->...f", h, p[name].astype(dt))
 
-    h = mm("wi", x, p["wi"])
+    h = mm("wi", x)
     h = shard_ann(h, ("batch", "seq", "mlp"))
     if gated:
-        g = mm("wg", x, p["wg"])
+        g = mm("wg", x)
         h = f(g) * h
     else:
         h = f(h)
-    out = mm("wo", h, p["wo"])
+    out = mm("wo", h)
     return shard_ann(out, ("batch", "seq", "embed"))
 
 

@@ -7,12 +7,21 @@ unrolled remainder (RecurrentGemma's 38 = 12x3 + 2). Each pattern element is
 a full layer: mixer (attention / RG-LRU / RWKV time-mix) + FFN (MLP / MoE /
 RWKV channel-mix), pre-norm residuals.
 
-Two entry points per model:
+Three entry points per model:
     apply_train(params, batch)            full-sequence forward -> logits, aux
     decode_step(params, tok, cache, pos)  one token + cache -> logits, cache
+    prefill(params, prompt, cache)        whole prompt -> last logits, cache
 
-Both are pure functions built by ``make_model(cfg)``; remat policy for the
+All are pure functions built by ``make_model(cfg)``; remat policy for the
 scan body is configurable (train memory).
+
+**Compressed runtime**: every entry point accepts either a raw param tree or
+a ``repro.sparse.compress.CompressedParams``. The sparse map mirrors the
+params nesting and its BlockCSR leaves are stacked over ``n_super`` (padded
+to a uniform slot count), so compressed weights ride through the layer-stack
+``lax.scan`` next to the dense residue; attention QKV/O, MLP, and head
+projections with a BCSR entry dispatch ``sparse_matmul`` — the paper's
+inference-in-compressed-form, whole-model.
 """
 from __future__ import annotations
 
@@ -29,9 +38,22 @@ from repro.models import attention, moe as moe_lib, rglru, rwkv6
 from repro.models.layers import (apply_embed, apply_head, apply_mlp,
                                  apply_norm, init_embed, init_mlp, init_norm,
                                  truncated_normal_init)
+from repro.sparse.compress import CompressedParams
 
 Array = jax.Array
 PyTree = Any
+
+
+def _split_params(params) -> tuple[PyTree, Optional[PyTree]]:
+    """Accept raw params or CompressedParams everywhere.
+
+    Returns (dense_residue, sparse_map-or-None); the sparse map mirrors the
+    params nesting with BlockCSR leaves (stacked over n_super under
+    "layers", so it scans alongside the dense stack).
+    """
+    if isinstance(params, CompressedParams):
+        return params.dense, params.sparse
+    return params, None
 
 
 def _dtype(name: str):
@@ -70,10 +92,13 @@ def _zero_aux():
 
 
 def _apply_layer_train(p: dict, x: Array, cfg: ModelConfig, kind: str,
-                       positions: Array) -> tuple[Array, dict]:
+                       positions: Array, sp: Optional[dict] = None
+                       ) -> tuple[Array, dict]:
+    sp = sp or {}
     h = apply_norm(p["pre_norm"], x, cfg.norm)
     if kind == "attn":
-        mix = attention.apply_attention(p["attn"], h, cfg, positions)
+        mix = attention.apply_attention(p["attn"], h, cfg, positions,
+                                        sparse=sp.get("attn"))
     elif kind == "rglru":
         mix, _ = rglru.apply_rglru_block(p["rec"], h, cfg, None)
     elif kind == "rwkv":
@@ -86,17 +111,20 @@ def _apply_layer_train(p: dict, x: Array, cfg: ModelConfig, kind: str,
     elif cfg.moe is not None:
         f, aux = moe_lib.apply_moe(p["moe"], h, cfg)
     else:
-        f = apply_mlp(p["mlp"], h, cfg.act, cfg.mlp_gated)
+        f = apply_mlp(p["mlp"], h, cfg.act, cfg.mlp_gated,
+                      sparse_weights=sp.get("mlp"))
     return x + f, aux
 
 
 def _apply_layer_decode(p: dict, x: Array, cfg: ModelConfig, kind: str,
-                        cache: dict, pos: Array) -> tuple[Array, dict]:
+                        cache: dict, pos: Array, sp: Optional[dict] = None
+                        ) -> tuple[Array, dict]:
+    sp = sp or {}
     h = apply_norm(p["pre_norm"], x, cfg.norm)
     new_cache = dict(cache)
     if kind == "attn":
         mix, new_cache["attn"] = attention.decode_attention(
-            p["attn"], h, cache["attn"], pos, cfg)
+            p["attn"], h, cache["attn"], pos, cfg, sparse=sp.get("attn"))
     elif kind == "rglru":
         mix, new_cache["rec"] = rglru.apply_rglru_block(
             p["rec"], h, cfg, cache["rec"])
@@ -110,7 +138,38 @@ def _apply_layer_decode(p: dict, x: Array, cfg: ModelConfig, kind: str,
     elif cfg.moe is not None:
         f, _ = moe_lib.apply_moe(p["moe"], h, cfg)
     else:
-        f = apply_mlp(p["mlp"], h, cfg.act, cfg.mlp_gated)
+        f = apply_mlp(p["mlp"], h, cfg.act, cfg.mlp_gated,
+                      sparse_weights=sp.get("mlp"))
+    return x + f, new_cache
+
+
+def _apply_layer_prefill(p: dict, x: Array, cfg: ModelConfig, kind: str,
+                         cache: dict, positions: Array,
+                         sp: Optional[dict] = None) -> tuple[Array, dict]:
+    """Full-sequence forward that also produces the post-prompt cache state.
+
+    Recurrent kinds run their train-path full-sequence scan from a fresh
+    state (the prompt starts at position 0) and keep the final state;
+    attention fills the ring KV cache in one write."""
+    sp = sp or {}
+    h = apply_norm(p["pre_norm"], x, cfg.norm)
+    new_cache = dict(cache)
+    if kind == "attn":
+        mix, new_cache["attn"] = attention.prefill_attention(
+            p["attn"], h, cache["attn"], positions, cfg, sparse=sp.get("attn"))
+    elif kind == "rglru":
+        mix, new_cache["rec"] = rglru.apply_rglru_block(p["rec"], h, cfg, None)
+    elif kind == "rwkv":
+        mix, new_cache["tm"] = rwkv6.apply_time_mix(p["tm"], h, cfg, None)
+    x = x + mix
+    h = apply_norm(p["ffn_norm"], x, cfg.norm)
+    if kind == "rwkv":
+        f, new_cache["cm"] = rwkv6.apply_channel_mix(p["cm"], h, None)
+    elif cfg.moe is not None:
+        f, _ = moe_lib.apply_moe(p["moe"], h, cfg)
+    else:
+        f = apply_mlp(p["mlp"], h, cfg.act, cfg.mlp_gated,
+                      sparse_weights=sp.get("mlp"))
     return x + f, new_cache
 
 
@@ -136,10 +195,14 @@ def _init_super(key, cfg: ModelConfig) -> dict:
             for i, kind in enumerate(cfg.block_pattern)}
 
 
-def _super_train(p: dict, x: Array, cfg: ModelConfig, positions: Array):
+def _super_train(p: dict, x: Array, cfg: ModelConfig, positions: Array,
+                 sp: Optional[dict] = None):
+    sp = sp or {}
     aux = _zero_aux()
     for i, kind in enumerate(cfg.block_pattern):
-        x, a = _apply_layer_train(p[f"b{i}_{kind}"], x, cfg, kind, positions)
+        key = f"b{i}_{kind}"
+        x, a = _apply_layer_train(p[key], x, cfg, kind, positions,
+                                  sp.get(key))
         aux = jax.tree.map(jnp.add, aux, a)
     # sequence-parallel residual carry: the inter-layer (bwd-residual) x is
     # seq-sharded over 'model' so the layer-stack residual shrinks by the
@@ -152,12 +215,26 @@ def _super_train(p: dict, x: Array, cfg: ModelConfig, positions: Array):
     return x, aux
 
 
-def _super_decode(p: dict, x: Array, cfg: ModelConfig, cache: dict, pos):
+def _super_decode(p: dict, x: Array, cfg: ModelConfig, cache: dict, pos,
+                  sp: Optional[dict] = None):
+    sp = sp or {}
     new_cache = {}
     for i, kind in enumerate(cfg.block_pattern):
         key = f"b{i}_{kind}"
         x, new_cache[key] = _apply_layer_decode(p[key], x, cfg, kind,
-                                                cache[key], pos)
+                                                cache[key], pos, sp.get(key))
+    return x, new_cache
+
+
+def _super_prefill(p: dict, x: Array, cfg: ModelConfig, cache: dict,
+                   positions: Array, sp: Optional[dict] = None):
+    sp = sp or {}
+    new_cache = {}
+    for i, kind in enumerate(cfg.block_pattern):
+        key = f"b{i}_{kind}"
+        x, new_cache[key] = _apply_layer_prefill(p[key], x, cfg, kind,
+                                                 cache[key], positions,
+                                                 sp.get(key))
     return x, new_cache
 
 
@@ -167,12 +244,16 @@ def _super_decode(p: dict, x: Array, cfg: ModelConfig, cache: dict, pos):
 
 @dataclasses.dataclass(frozen=True)
 class Model:
+    """Every apply fn accepts raw params OR ``CompressedParams`` — the
+    compressed-model runtime: BCSR weights take the sparse_matmul path in
+    attention/MLP/head, everything else reads the dense residue."""
     cfg: ModelConfig
     init: Callable
     apply_train: Callable       # (params, batch) -> (logits, aux)
     apply_hidden: Callable      # (params, batch) -> (hidden, aux)  [no head]
     head: Callable              # (params, hidden) -> logits
     decode_step: Callable       # (params, x, cache, pos) -> (logits, cache)
+    prefill: Callable           # (params, prompt, cache) -> (logits, cache)
     init_cache: Callable        # (batch, seq_len, dtype) -> cache
 
 
@@ -212,30 +293,38 @@ def make_model(cfg: ModelConfig, remat: bool = True,
         return apply_embed(params["embed"], inputs, cdt)
 
     def head(params, x):
-        x = apply_norm(params["final_norm"], x, cfg.norm)
-        hp = {"embedding": params["embed"]["embedding"]} if cfg.tie_embeddings \
-            else {"head": params["head"]}
-        return apply_head(hp, x, cfg.tie_embeddings, cfg.logit_softcap)
+        dense, sparse = _split_params(params)
+        x = apply_norm(dense["final_norm"], x, cfg.norm)
+        hp = {"embedding": dense["embed"]["embedding"]} if cfg.tie_embeddings \
+            else {"head": dense["head"]}
+        sw = {"head": sparse["head"]} if sparse and "head" in sparse else None
+        return apply_head(hp, x, cfg.tie_embeddings, cfg.logit_softcap,
+                          sparse_weights=sw)
 
     def apply_hidden(params, batch) -> tuple[Array, dict]:
+        dense, sparse = _split_params(params)
+        sp_layers = (sparse or {}).get("layers", {})
+        sp_rem = (sparse or {}).get("rem", {})
         inputs = batch["inputs"]
-        x = embed_inputs(params, inputs)
+        x = embed_inputs(dense, inputs)
         b, s = x.shape[0], x.shape[1]
         positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
 
-        def body(carry, layer_p):
+        def body(carry, xs):
+            layer_p, layer_sp = xs
             x, aux = carry
-            x2, a = _super_train(layer_p, x, cfg, positions)
+            x2, a = _super_train(layer_p, x, cfg, positions, layer_sp)
             return (x2, jax.tree.map(jnp.add, aux, a)), None
 
         body_fn = body
         if remat:
             body_fn = jax.checkpoint(body, policy=policy)
         (x, aux), _ = jax.lax.scan(body_fn, (x, _zero_aux()),
-                                   params["layers"])
+                                   (dense["layers"], sp_layers))
         for i, kind in enumerate(rem):
-            x, a = _apply_layer_train(params["rem"][f"r{i}_{kind}"], x, cfg,
-                                      kind, positions)
+            x, a = _apply_layer_train(dense["rem"][f"r{i}_{kind}"], x, cfg,
+                                      kind, positions,
+                                      sp_rem.get(f"r{i}_{kind}"))
             aux = jax.tree.map(jnp.add, aux, a)
         return x, aux
 
@@ -261,24 +350,60 @@ def make_model(cfg: ModelConfig, remat: bool = True,
 
     def decode_step(params, inputs, cache, pos) -> tuple[Array, PyTree]:
         """inputs: (B, 1) ids or (B, 1, d) embeddings; pos: scalar int32."""
-        x = embed_inputs(params, inputs)
+        dense, sparse = _split_params(params)
+        sp_layers = (sparse or {}).get("layers", {})
+        sp_rem = (sparse or {}).get("rem", {})
+        x = embed_inputs(dense, inputs)
 
         def body(x, xs):
-            layer_p, layer_c = xs
-            x2, c2 = _super_decode(layer_p, x, cfg, layer_c, pos)
+            layer_p, layer_c, layer_sp = xs
+            x2, c2 = _super_decode(layer_p, x, cfg, layer_c, pos, layer_sp)
             return x2, c2
 
         x, new_layer_cache = jax.lax.scan(
-            body, x, (params["layers"], cache["layers"]))
+            body, x, (dense["layers"], cache["layers"], sp_layers))
         new_cache = {"layers": new_layer_cache}
         if rem:
             new_cache["rem"] = {}
             for i, kind in enumerate(rem):
                 key = f"r{i}_{kind}"
                 x, new_cache["rem"][key] = _apply_layer_decode(
-                    params["rem"][key], x, cfg, kind, cache["rem"][key], pos)
+                    dense["rem"][key], x, cfg, kind, cache["rem"][key], pos,
+                    sp_rem.get(key))
         return head(params, x), new_cache
+
+    def prefill(params, inputs, cache) -> tuple[Array, PyTree]:
+        """Consume the whole prompt in one forward, filling the cache.
+
+        inputs: (B, S) ids or (B, S, d) embeddings. Returns (last-position
+        logits (B, vocab), cache ready for decode at pos = S) — one jit
+        dispatch instead of S stepwise decodes."""
+        dense, sparse = _split_params(params)
+        sp_layers = (sparse or {}).get("layers", {})
+        sp_rem = (sparse or {}).get("rem", {})
+        x = embed_inputs(dense, inputs)
+        b, s = x.shape[0], x.shape[1]
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+
+        def body(x, xs):
+            layer_p, layer_c, layer_sp = xs
+            x2, c2 = _super_prefill(layer_p, x, cfg, layer_c, positions,
+                                    layer_sp)
+            return x2, c2
+
+        x, new_layer_cache = jax.lax.scan(
+            body, x, (dense["layers"], cache["layers"], sp_layers))
+        new_cache = {"layers": new_layer_cache}
+        if rem:
+            new_cache["rem"] = {}
+            for i, kind in enumerate(rem):
+                key = f"r{i}_{kind}"
+                x, new_cache["rem"][key] = _apply_layer_prefill(
+                    dense["rem"][key], x, cfg, kind, cache["rem"][key],
+                    positions, sp_rem.get(key))
+        return head(params, x[:, -1:])[:, 0], new_cache
 
     return Model(cfg=cfg, init=init, apply_train=apply_train,
                  apply_hidden=apply_hidden, head=head,
-                 decode_step=decode_step, init_cache=init_cache)
+                 decode_step=decode_step, prefill=prefill,
+                 init_cache=init_cache)

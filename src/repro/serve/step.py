@@ -4,6 +4,11 @@
 token against a seq_len-deep cache — per the assignment. Greedy sampling is
 the default; the sampler is pluggable (temperature / top-k live here, not in
 the model).
+
+All factories are compression-transparent: ``params`` may be a raw param
+tree or a ``repro.sparse.compress.CompressedParams``, in which case every
+projection with a BlockCSR entry runs on the compressed kernel path
+(the paper's serve-from-compressed-form promise).
 """
 from __future__ import annotations
 
@@ -13,6 +18,15 @@ import jax
 import jax.numpy as jnp
 
 from repro.models.transformer import Model
+
+
+def sample_token(logits, temperature: float = 0.0, rng=None):
+    """logits (B, vocab) -> token ids (B,) int32 (greedy or sampled)."""
+    if temperature > 0.0 and rng is not None:
+        tok = jax.random.categorical(rng, logits / temperature, axis=-1)
+    else:
+        tok = jnp.argmax(logits, axis=-1)
+    return tok.astype(jnp.int32)
 
 
 def make_prefill_step(model: Model) -> Callable:
@@ -30,28 +44,33 @@ def make_decode_step(model: Model, temperature: float = 0.0) -> Callable:
         """inputs: (B, 1) ids (or (B, 1, d) frontend embeddings)."""
         logits, cache = model.decode_step(params, inputs, cache, pos)
         logits = logits[:, 0]
-        if temperature > 0.0 and rng is not None:
-            tok = jax.random.categorical(rng, logits / temperature, axis=-1)
-        else:
-            tok = jnp.argmax(logits, axis=-1)
-        return tok.astype(jnp.int32), logits, cache
+        tok = sample_token(logits, temperature, rng)
+        return tok, logits, cache
     return decode_step
 
 
 def generate(model: Model, params, prompt, steps: int,
              temperature: float = 0.0, rng=None):
-    """Simple batched greedy/sampled generation loop (examples/serving)."""
+    """Batched greedy/sampled generation: one prefill dispatch for the whole
+    prompt (``model.prefill`` fills the KV cache in a single forward),
+    then the decode loop — instead of O(prompt_len) stepwise jit dispatches."""
     b, s = prompt.shape
     cache = model.init_cache(b, s + steps)
+    prefill = jax.jit(model.prefill)
     decode = jax.jit(make_decode_step(model, temperature))
-    # prefill by stepping the prompt (simple; prefill kernel is in step.py)
-    tok = None
-    for t in range(s):
-        tok, logits, cache = decode(params, prompt[:, t:t + 1], cache,
-                                    jnp.int32(t), rng)
+
+    def next_key():
+        nonlocal rng
+        if rng is None:
+            return None
+        rng, sub = jax.random.split(rng)
+        return sub
+
+    logits, cache = prefill(params, prompt, cache)
+    tok = sample_token(logits, temperature, next_key())
     out = [tok]
     for t in range(s, s + steps - 1):
         tok, logits, cache = decode(params, out[-1][:, None], cache,
-                                    jnp.int32(t), rng)
+                                    jnp.int32(t), next_key())
         out.append(tok)
     return jnp.stack(out, axis=1)

@@ -160,6 +160,38 @@ def bcsr_density(m: BlockCSR) -> float:
     return m.n_blocks / max(R * C, 1)
 
 
+def pad_bcsr(m: BlockCSR, n_slots: int, jmax: int, jmax_t: int) -> BlockCSR:
+    """Pad a BlockCSR's slot store and gather tables to fixed widths.
+
+    Extra slots are zero blocks and extra gather columns point at slot 0 (the
+    pad), so the kernel's output is unchanged. This makes BCSRs of different
+    sparsity patterns shape-compatible, which is what lets per-layer
+    compressed weights be ``jnp.stack``-ed and ridden through the layer-stack
+    ``lax.scan`` (see sparse/compress.py). ``n_blocks`` is set to the padded
+    slot count so the stacked metas compare equal; ``nbytes`` then reports
+    the bytes actually stored.
+    """
+    cur_slots = m.data.shape[0]
+    cur_j, cur_jt = m.gather_idx.shape[1], m.gather_t_idx.shape[1]
+    assert n_slots >= cur_slots and jmax >= cur_j and jmax_t >= cur_jt, (
+        (n_slots, jmax, jmax_t), (cur_slots, cur_j, cur_jt))
+
+    def pad0(a, widths):
+        return jnp.pad(a, widths)
+
+    return BlockCSR(
+        data=pad0(m.data, ((0, n_slots - cur_slots), (0, 0), (0, 0))),
+        col_idx=pad0(m.col_idx, ((0, n_slots - cur_slots),)),
+        row_ptr=m.row_ptr,
+        gather_idx=pad0(m.gather_idx, ((0, 0), (0, jmax - cur_j))),
+        gather_blk=pad0(m.gather_blk, ((0, 0), (0, jmax - cur_j))),
+        gather_nnz=m.gather_nnz,
+        gather_t_idx=pad0(m.gather_t_idx, ((0, 0), (0, jmax_t - cur_jt))),
+        gather_t_blk=pad0(m.gather_t_blk, ((0, 0), (0, jmax_t - cur_jt))),
+        gather_t_nnz=m.gather_t_nnz,
+        shape=m.shape, block=m.block, n_blocks=n_slots - 1)
+
+
 # ---------------------------------------------------------------------------
 # Elementwise CSR (paper-fidelity reference format)
 # ---------------------------------------------------------------------------

@@ -1,6 +1,8 @@
-"""Fused Prox-ADAM Pallas kernel vs ref.py oracle and core optimizer."""
-import hypothesis
-import hypothesis.strategies as st
+"""Fused Prox-ADAM Pallas kernel vs ref.py oracle and core optimizer.
+
+The hypothesis sweep runs when the package is installed; a seeded
+parametrized fallback covers the same invariant otherwise.
+"""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -8,6 +10,13 @@ import pytest
 
 from repro.core import optimizers
 from repro.kernels.prox_adam import ops as pops
+
+try:
+    import hypothesis
+    import hypothesis.strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
 
 
 @pytest.mark.parametrize("shape", [(256, 128), (333, 77), (5,), (1000,),
@@ -27,10 +36,7 @@ def test_fused_vs_ref(shape, rule):
         np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
 
 
-@hypothesis.given(st.integers(1, 4096), st.floats(1e-4, 1.0),
-                  st.floats(0.0, 10.0), st.integers(1, 100))
-@hypothesis.settings(max_examples=20, deadline=None)
-def test_fused_property_sweep(n, lr, lam, t):
+def _sweep_case(n, lr, lam, t):
     rng = np.random.default_rng(n)
     w = jnp.asarray(rng.normal(size=(n,)), jnp.float32)
     g = jnp.asarray(rng.normal(size=(n,)), jnp.float32)
@@ -39,6 +45,21 @@ def test_fused_property_sweep(n, lr, lam, t):
     w2, m2, v2 = pops.fused_update_leaf(w, g, z, z, sc, rule="adam")
     wr, mr, vr = pops.fused_prox_update_ref(w, g, z, z, sc, rule="adam")
     np.testing.assert_allclose(np.asarray(w2), np.asarray(wr), atol=1e-5)
+
+
+@pytest.mark.parametrize("seed", range(6))
+def test_fused_sweep_seeded(seed):
+    rng = np.random.default_rng(seed)
+    _sweep_case(int(rng.integers(1, 4097)), float(rng.uniform(1e-4, 1.0)),
+                float(rng.uniform(0.0, 10.0)), int(rng.integers(1, 101)))
+
+
+if HAVE_HYPOTHESIS:
+    @hypothesis.given(st.integers(1, 4096), st.floats(1e-4, 1.0),
+                      st.floats(0.0, 10.0), st.integers(1, 100))
+    @hypothesis.settings(max_examples=20, deadline=None)
+    def test_fused_property_sweep(n, lr, lam, t):
+        _sweep_case(n, lr, lam, t)
 
 
 def test_fused_matches_core_optimizer_trajectory():

@@ -1,11 +1,21 @@
-"""BCSR / CSR format tests: roundtrips + hypothesis property sweeps."""
-import hypothesis
-import hypothesis.strategies as st
+"""BCSR / CSR format tests: roundtrips + property sweeps.
+
+Hypothesis sweeps run when the package is installed; seeded parametrized
+fallbacks cover the same roundtrip invariants otherwise.
+"""
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.sparse.formats import (bcsr_density, bcsr_to_dense, csr_to_dense,
-                                  dense_to_bcsr, dense_to_csr)
+                                  dense_to_bcsr, dense_to_csr, pad_bcsr)
+
+try:
+    import hypothesis
+    import hypothesis.strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
 
 
 def _random_block_sparse(rng, rows, cols, block, density):
@@ -20,12 +30,7 @@ def _random_block_sparse(rng, rows, cols, block, density):
     return w[:rows, :cols]
 
 
-@hypothesis.given(
-    st.integers(1, 5), st.integers(1, 5),
-    st.sampled_from([(8, 8), (8, 16), (16, 8)]),
-    st.floats(0.0, 1.0), st.integers(0, 2**31 - 1))
-@hypothesis.settings(max_examples=40, deadline=None)
-def test_bcsr_roundtrip_property(rb, cb, block, density, seed):
+def _bcsr_roundtrip_case(rb, cb, block, density, seed):
     rng = np.random.default_rng(seed)
     rows, cols = rb * block[0], cb * block[1]
     w = _random_block_sparse(rng, rows, cols, block, density)
@@ -33,6 +38,48 @@ def test_bcsr_roundtrip_property(rb, cb, block, density, seed):
     back = np.asarray(bcsr_to_dense(m))[:rows, :cols]
     np.testing.assert_array_equal(back, w)
     assert 0 <= bcsr_density(m) <= 1
+
+
+@pytest.mark.parametrize("seed", range(10))
+def test_bcsr_roundtrip_seeded(seed):
+    rng = np.random.default_rng(seed)
+    rb, cb = int(rng.integers(1, 6)), int(rng.integers(1, 6))
+    block = [(8, 8), (8, 16), (16, 8)][seed % 3]
+    density = float(rng.uniform(0, 1))
+    _bcsr_roundtrip_case(rb, cb, block, density, seed)
+
+
+if HAVE_HYPOTHESIS:
+    @hypothesis.given(
+        st.integers(1, 5), st.integers(1, 5),
+        st.sampled_from([(8, 8), (8, 16), (16, 8)]),
+        st.floats(0.0, 1.0), st.integers(0, 2**31 - 1))
+    @hypothesis.settings(max_examples=40, deadline=None)
+    def test_bcsr_roundtrip_property(rb, cb, block, density, seed):
+        _bcsr_roundtrip_case(rb, cb, block, density, seed)
+
+    @hypothesis.given(st.integers(1, 40), st.integers(1, 40),
+                      st.floats(0, 1), st.integers(0, 2**31 - 1))
+    @hypothesis.settings(max_examples=40, deadline=None)
+    def test_csr_roundtrip_property(rows, cols, density, seed):
+        rng = np.random.default_rng(seed)
+        w = rng.normal(size=(rows, cols)).astype(np.float32)
+        w[rng.random((rows, cols)) > density] = 0
+        c = dense_to_csr(w)
+        np.testing.assert_array_equal(np.asarray(csr_to_dense(c)), w)
+        assert c.nnz == np.count_nonzero(w)
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_csr_roundtrip_seeded(seed):
+    rng = np.random.default_rng(seed)
+    rows, cols = int(rng.integers(1, 41)), int(rng.integers(1, 41))
+    density = float(rng.uniform(0, 1))
+    w = rng.normal(size=(rows, cols)).astype(np.float32)
+    w[rng.random((rows, cols)) > density] = 0
+    c = dense_to_csr(w)
+    np.testing.assert_array_equal(np.asarray(csr_to_dense(c)), w)
+    assert c.nnz == np.count_nonzero(w)
 
 
 def test_bcsr_nonmultiple_shape_pads():
@@ -57,13 +104,13 @@ def test_bcsr_nbytes_smaller_when_sparse():
     assert m.nbytes < w.size * 4 * 0.35
 
 
-@hypothesis.given(st.integers(1, 40), st.integers(1, 40),
-                  st.floats(0, 1), st.integers(0, 2**31 - 1))
-@hypothesis.settings(max_examples=40, deadline=None)
-def test_csr_roundtrip_property(rows, cols, density, seed):
-    rng = np.random.default_rng(seed)
-    w = rng.normal(size=(rows, cols)).astype(np.float32)
-    w[rng.random((rows, cols)) > density] = 0
-    c = dense_to_csr(w)
-    np.testing.assert_array_equal(np.asarray(csr_to_dense(c)), w)
-    assert c.nnz == np.count_nonzero(w)
+def test_pad_bcsr_preserves_dense_equivalent():
+    """Padded slots/gather columns are no-ops — the uniform-shape stacking
+    trick behind the compressed layer-stack scan."""
+    rng = np.random.default_rng(3)
+    w = _random_block_sparse(rng, 32, 48, (8, 8), 0.4)
+    m = dense_to_bcsr(w, (8, 8))
+    p = pad_bcsr(m, m.data.shape[0] + 3, m.gather_idx.shape[1] + 2,
+                 m.gather_t_idx.shape[1] + 1)
+    np.testing.assert_array_equal(np.asarray(bcsr_to_dense(p))[:32, :48], w)
+    assert p.data.shape[0] == m.data.shape[0] + 3
