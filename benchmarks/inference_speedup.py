@@ -163,5 +163,11 @@ def decode_compressed_row(gen_steps: int = 8):
 
 
 if __name__ == "__main__":
-    for r in run():
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=STEPS,
+                    help="SpC training steps (CI tier-2 uses a short run)")
+    args = ap.parse_args()
+    for r in run(steps=args.steps):
         print(r)

@@ -187,6 +187,60 @@ class Checkpointer:
                                "manifest.json")) as f:
             return json.load(f)
 
+    def restore_compressed(self, step: Optional[int] = None):
+        """Template-free restore of a ``CompressedParams`` checkpoint.
+
+        The manifest's leaf names ("dense/..." / "sparse/...") carry the
+        full tree structure and the ``extra['plan']`` entry the
+        ``CompressionPlan``, so a server can load a compressed model written
+        by ``launch/train --sparse`` without re-deriving a template from the
+        architecture (the sparsity pattern lives in the checkpoint, not the
+        code). BlockCSR leaves rebuild without densifying.
+        """
+        from repro.sparse.compress import CompressedParams, CompressionPlan
+
+        step = self.latest_step() if step is None else step
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.dir}")
+        path = os.path.join(self.dir, f"step_{step:09d}")
+        with open(os.path.join(path, "manifest.json")) as f:
+            manifest = json.load(f)
+        npz = np.load(os.path.join(path, "arrays.npz"))
+
+        import jax.numpy as jnp
+        roots = {"dense": {}, "sparse": {}}
+        for e in manifest["leaves"]:
+            name = e["name"]
+            root, _, rest = name.partition("/")
+            if root not in roots or not rest:
+                raise ValueError(
+                    f"step {step} in {self.dir} is not a CompressedParams "
+                    f"checkpoint (leaf {name!r}; was it written by "
+                    f"launch/train --sparse?)")
+            if e["format"] == "bcsr":
+                leaf = _bcsr_restore(npz, name, e)
+            elif e["format"] == "csr":
+                leaf = jnp.asarray(_csr_restore(npz, name, tuple(e["shape"]),
+                                                np.dtype(e["dtype"])))
+            else:
+                leaf = jnp.asarray(npz[name.replace("/", "|")])
+            node = roots[root]
+            keys = rest.split("/")
+            for k in keys[:-1]:
+                node = node.setdefault(k, {})
+            node[keys[-1]] = leaf
+
+        spec = (manifest.get("extra") or {}).get("plan")
+        plan = CompressionPlan()
+        if spec:
+            plan = CompressionPlan(
+                block=tuple(spec["block"]),
+                min_sparsity=spec["min_sparsity"],
+                min_size=spec["min_size"],
+                overrides=tuple((s, tuple(b)) for s, b in spec["overrides"]))
+        return CompressedParams(dense=roots["dense"], sparse=roots["sparse"],
+                                plan=plan)
+
 
 def _bcsr_restore(npz, name, entry) -> BlockCSR:
     """Rebuild a BlockCSR leaf from its stored arrays — no densification.

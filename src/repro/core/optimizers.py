@@ -18,6 +18,7 @@ here is the oracle the kernel is tested against.
 from __future__ import annotations
 
 import dataclasses
+import inspect
 from typing import Any, Callable, NamedTuple, Optional
 
 import jax
@@ -59,11 +60,21 @@ def _make(name: str,
           lam,
           prox_name: str = "l1",
           prox_kwargs: Optional[dict] = None,
+          prox_fn: Optional[Callable] = None,
           regularized_predicate=None,
           weight_decay: float = 0.0) -> ProxOptimizer:
+    """``prox_fn`` overrides the registry lookup; a prox accepting a ``path``
+    keyword is called with the leaf's tree path — the hook that lets
+    ``sparse.compress.make_plan_prox`` apply block group-l1 on the exact
+    (out, in) BCSR grid per weight (SpC-Retrain trains into BlockCSR)."""
     lr_s = _as_schedule(learning_rate)
     lam_s = _as_schedule(lam)
-    prox_fn = prox_lib.get_prox(prox_name, **(prox_kwargs or {}))
+    if prox_fn is None:
+        prox_fn = prox_lib.get_prox(prox_name, **(prox_kwargs or {}))
+    try:
+        path_aware = "path" in inspect.signature(prox_fn).parameters
+    except (TypeError, ValueError):
+        path_aware = False
     predicate = regularized_predicate or prox_lib.default_regularized_predicate
 
     def init(params: PyTree) -> ProxState:
@@ -95,7 +106,8 @@ def _make(name: str,
             d, m2, v2 = direction_fn(g32, m, v, t)
             z = p32 - eta * d
             if predicate(name_str, p):
-                z = prox_fn(z, tau)
+                z = (prox_fn(z, tau, path=name_str) if path_aware
+                     else prox_fn(z, tau))
             new_p.append(z.astype(p.dtype))
             new_m.append(m2)
             new_v.append(v2)

@@ -19,8 +19,14 @@ _INTERPRET = True   # CPU container default
 
 
 def slot_coordinates(w: BlockCSR):
-    """Per-slot (block-row, block-col) int32 vectors, derived jit-safely
-    from the gather tables (slot 0 keeps (0, 0))."""
+    """Per-slot (block-row, block-col, valid) vectors, derived jit-safely
+    from the gather tables (slot 0 keeps (0, 0)).
+
+    ``valid`` marks slots actually referenced by a gather entry: the pad
+    slot 0 and any trailing slots added by ``formats.pad_bcsr`` (empty /
+    fully-pruned layers padded up to a stacked slot count) are invalid and
+    must carry zero gradient — without the mask they would silently pick up
+    the (0, 0) block's gradient."""
     n_slots = w.data.shape[0]
     r_grid = w.gather_idx.shape[0]
     rows_src = jnp.repeat(jnp.arange(r_grid, dtype=jnp.int32),
@@ -29,7 +35,8 @@ def slot_coordinates(w: BlockCSR):
     rows = jnp.zeros((n_slots,), jnp.int32).at[slots].set(rows_src)
     cols = jnp.zeros((n_slots,), jnp.int32).at[slots].set(
         w.gather_idx.reshape(-1).astype(jnp.int32))
-    return rows.at[0].set(0), cols.at[0].set(0)
+    valid = jnp.zeros((n_slots,), bool).at[slots].set(True).at[0].set(False)
+    return rows.at[0].set(0), cols.at[0].set(0), valid
 
 
 @functools.partial(jax.jit, static_argnames=("bm", "interpret"))
@@ -52,14 +59,15 @@ def bsr_weight_grad(x, dy, w: BlockCSR, *, bm: int = 128,
         dy = jnp.pad(dy, ((0, 0), (0, n_pad - dy.shape[1])))
     if x.shape[1] != k_pad:
         x = jnp.pad(x, ((0, 0), (0, k_pad - x.shape[1])))
-    rows, cols = slot_coordinates(w)
+    rows, cols, valid = slot_coordinates(w)
     out = sddmm_block_grad(dy, x, rows, cols, w.data.shape[0], br, bc,
                            bm=bm, interpret=interpret)
-    return out.at[0].set(0.0)          # pad slot carries no gradient
+    # pad slots (slot 0 + pad_bcsr padding) carry no gradient
+    return out * valid[:, None, None].astype(out.dtype)
 
 
 def bsr_weight_grad_ref(x, dy, w: BlockCSR):
-    rows, cols = slot_coordinates(w)
+    rows, cols, valid = slot_coordinates(w)
     br, bc = w.block
     n_pad = w.block_grid[0] * br
     k_pad = w.block_grid[1] * bc
@@ -67,4 +75,4 @@ def bsr_weight_grad_ref(x, dy, w: BlockCSR):
     x = jnp.pad(x, ((0, 0), (0, k_pad - x.shape[1])))
     out = ref_lib.sddmm_block_grad_ref(dy, x, rows, cols,
                                        w.data.shape[0], br, bc)
-    return out.at[0].set(0.0)
+    return out * valid[:, None, None].astype(out.dtype)

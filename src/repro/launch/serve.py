@@ -10,22 +10,30 @@ BlockCSR; dense fallback for matrices that don't compress) and serves from
 it: every compressed projection dispatches ``sparse_matmul`` on the prefill
 and decode paths, and the reported model size is the real BCSR byte count
 (data + block col_idx + row_ptr), not a hypothetical CSR table.
+
+``--ckpt-dir <dir>`` instead loads a compressed checkpoint written by
+``launch/train --sparse`` (SpC-Retrain: trained into BlockCSR, debiased
+with masks frozen) and serves it directly — no pruning, the sparsity came
+from training. The manifest's arch/reduced tags are validated against the
+serve flags.
 """
 from __future__ import annotations
 
 import argparse
+import os
 import time
 
 import jax
 import jax.numpy as jnp
 
+from repro.checkpoint.checkpointer import Checkpointer
 from repro.configs import get_config
 from repro.core.metrics import model_size_bytes
 from repro.models.model_zoo import build
 from repro.serve.step import generate
 from repro.sparse.compress import (CompressionPlan, compress_params,
                                    compressed_size_bytes, compression_summary,
-                                   prune_blocks_for_plan)
+                                   format_size_report, prune_blocks_for_plan)
 
 
 def main(argv=None):
@@ -43,15 +51,45 @@ def main(argv=None):
                     metavar=("BR", "BC"), help="BCSR block (out, in) view")
     ap.add_argument("--min-block-sparsity", type=float, default=0.5,
                     help="dense fallback below this zero-block fraction")
+    ap.add_argument("--ckpt-dir", default="",
+                    help="serve a compressed checkpoint from launch/train "
+                         "--sparse (looks in <dir>/compressed, then <dir>)")
     ap.add_argument("--temperature", type=float, default=0.0)
     args = ap.parse_args(argv)
 
     model = build(args.arch, reduced=args.reduced)
     cfg = model.cfg
     key = jax.random.PRNGKey(0)
-    params = model.init(key)
 
-    if args.sparse:
+    if args.ckpt_dir:
+        # --ckpt-dir always means "serve this compressed checkpoint" (with
+        # or without --sparse): silently serving random init instead of the
+        # artifact the user pointed at would be a footgun
+        cdir = os.path.join(args.ckpt_dir, "compressed")
+        if not os.path.isdir(cdir):
+            cdir = args.ckpt_dir
+        ckpt = Checkpointer(cdir)
+        latest = ckpt.latest_step()
+        if latest is None:
+            raise SystemExit(f"no checkpoints found in {cdir}")
+        extra = ckpt.manifest(latest).get("extra") or {}
+        if extra.get("arch") not in (None, args.arch) or \
+                extra.get("reduced") not in (None, args.reduced):
+            raise SystemExit(
+                f"checkpoint was trained with arch={extra.get('arch')!r} "
+                f"reduced={extra.get('reduced')} but serve got "
+                f"arch={args.arch!r} reduced={args.reduced}")
+        params = ckpt.restore_compressed()
+        bcsr_b = compressed_size_bytes(params)
+        # dense byte count from shapes only — don't allocate a dense model
+        # just to print the ratio
+        shapes = jax.eval_shape(model.init, key)
+        dense_b = sum(int(l.size) * l.dtype.itemsize
+                      for l in jax.tree.leaves(shapes))
+        print(compression_summary(params))
+        print(format_size_report(dense_b, bcsr_b))
+    elif args.sparse:
+        params = model.init(key)
         plan = CompressionPlan(block=tuple(args.block),
                                min_sparsity=args.min_block_sparsity)
         params = prune_blocks_for_plan(params, plan, args.sparsity)
@@ -59,8 +97,9 @@ def main(argv=None):
         params = compress_params(params, plan)
         bcsr_b = compressed_size_bytes(params)
         print(compression_summary(params))
-        print(f"model size dense={dense_b/2**20:.2f}MB "
-              f"bcsr={bcsr_b/2**20:.2f}MB ({dense_b/bcsr_b:.1f}x)")
+        print(format_size_report(dense_b, bcsr_b))
+    else:
+        params = model.init(key)
 
     prompt = jax.random.randint(key, (args.batch, args.prompt_len),
                                 0, cfg.vocab)

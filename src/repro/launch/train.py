@@ -6,12 +6,26 @@
 Runs compressed training (the paper's SpC pipeline) on any zoo architecture.
 On this CPU container use --reduced; on a pod, point --mesh at the production
 mesh and the same script drives all hosts (SPMD).
+
+``--sparse`` switches to SpC-Retrain (train *into* BlockCSR): the prox is the
+plan-aligned block group-l1 (exact zero blocks on the serving (out, in) BCSR
+grid), compression happens WITHOUT a prune step, the debias phase retrains
+the compressed model itself (masks frozen, only BlockCSR.data updates, dw via
+SDDMM at resident slots), and the final artifact is a compressed checkpoint
+under ``<ckpt-dir>/compressed`` that ``launch/serve --sparse --ckpt-dir``
+loads and serves from directly:
+
+    PYTHONPATH=src python -m repro.launch.train --arch smollm-360m --reduced \
+        --sparse --steps 60 --debias-steps 20 --compress group_l1:0.05 \
+        --block 8 64 --ckpt-dir /tmp/spc
 """
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import json
 import logging
+import os
 
 import jax
 import jax.numpy as jnp
@@ -25,7 +39,10 @@ from repro.distributed import sharding as shd
 from repro.launch.mesh import make_host_mesh, make_production_mesh
 from repro.models import frontends
 from repro.models.model_zoo import build
-from repro.train.loop import LoopConfig, run_spc_pipeline, train_loop
+from repro.sparse.compress import (CompressionPlan, compression_summary,
+                                   format_size_report, make_plan_prox)
+from repro.train.loop import (LoopConfig, run_spc_pipeline,
+                              run_spc_retrain_pipeline, train_loop)
 from repro.train.state import TrainState
 from repro.train.step import make_train_step
 
@@ -54,6 +71,15 @@ def main(argv=None):
     ap.add_argument("--mesh", default="none",
                     choices=["none", "single", "multi"])
     ap.add_argument("--log-every", type=int, default=20)
+    ap.add_argument("--sparse", action="store_true",
+                    help="SpC-Retrain: group-l1 on the BCSR grid, compress "
+                         "without pruning, debias the compressed model, and "
+                         "write a compressed checkpoint")
+    ap.add_argument("--block", type=int, nargs=2, default=(8, 64),
+                    metavar=("BR", "BC"),
+                    help="BCSR block on the (out, in) view (--sparse)")
+    ap.add_argument("--min-block-sparsity", type=float, default=0.3,
+                    help="dense fallback below this zero-block fraction")
     args = ap.parse_args(argv)
 
     logging.basicConfig(level=logging.INFO)
@@ -68,7 +94,20 @@ def main(argv=None):
     kind, lam = parse_compress(args.compress)
     opt_cls = {"prox_adam": prox_adam, "prox_rmsprop": prox_rmsprop,
                "prox_sgd": prox_sgd}[args.optimizer]
-    opt = opt_cls(args.lr, lam=lam, prox_name=kind if kind != "none" else "none")
+
+    plan = CompressionPlan(block=tuple(args.block),
+                           min_sparsity=args.min_block_sparsity)
+    if args.sparse:
+        # SpC-Retrain: block group-l1 on the exact compression grid — the
+        # regularizer, not a prune pass, creates the BCSR zero blocks
+        if kind != "group_l1" or lam <= 0:
+            raise SystemExit(
+                f"--sparse trains into BlockCSR via block group-l1; pass "
+                f"--compress group_l1:<lam> with lam > 0 (got {args.compress!r})")
+        opt = opt_cls(args.lr, lam=lam, prox_fn=make_plan_prox(plan))
+    else:
+        opt = opt_cls(args.lr, lam=lam,
+                      prox_name=kind if kind != "none" else "none")
     opt_debias = opt_cls(args.lr, lam=0.0)
 
     data_cfg = TokenStreamConfig(vocab=cfg.vocab, seq_len=args.seq,
@@ -87,13 +126,46 @@ def main(argv=None):
         mesh = make_production_mesh(multi_pod=args.mesh == "multi")
 
     ckpt = Checkpointer(args.ckpt_dir) if args.ckpt_dir else None
+    if ckpt is not None and ckpt.latest_step() is not None:
+        # train_loop resumes from the newest checkpoint: compression/prox
+        # flags are NOT re-applied to already-trained steps, so a rerun
+        # with different hyperparameters into the same dir silently keeps
+        # the old trajectory (at latest_step >= --steps the SpC phase is
+        # skipped entirely). Make that visible.
+        logging.getLogger("repro.launch.train").warning(
+            "resuming from existing checkpoint (step %d) in %s — "
+            "hyperparameter flags must match the original run; use a fresh "
+            "--ckpt-dir to restart training", ckpt.latest_step(),
+            args.ckpt_dir)
 
-    def make_step(o):
-        step = make_train_step(model, o)
+    def make_step(o, param_transform=None):
+        step = make_train_step(model, o, param_transform=param_transform)
         return jax.jit(step, donate_argnums=(0,))
 
     ctx = shd.use_mesh(mesh) if mesh is not None else _null_ctx()
     with ctx:
+        if args.sparse:
+            cp, hist_spc, hist_db, report = run_spc_retrain_pipeline(
+                params, make_step, opt, opt_debias, batch_fn,
+                spc_steps=args.steps, debias_steps=args.debias_steps,
+                plan=plan, checkpointer=ckpt, log_every=args.log_every)
+            print("compression:", json.dumps(report, indent=1))
+            if hist_spc:
+                print(f"loss: {hist_spc[0]['loss']:.4f} -> "
+                      f"{hist_spc[-1]['loss']:.4f}")
+            print(compression_summary(cp))
+            print(format_size_report(report["dense_bytes"],
+                                     report["bcsr_bytes"]))
+            if args.ckpt_dir:
+                cdir = os.path.join(args.ckpt_dir, "compressed")
+                final_step = args.steps + args.debias_steps
+                path = Checkpointer(cdir, keep_n=2).save(
+                    final_step, cp,
+                    extra={"plan": dataclasses.asdict(plan),
+                           "arch": args.arch, "reduced": args.reduced})
+                print(f"compressed checkpoint: {path}")
+            return cp, hist_spc, hist_db, report
+
         state, hist_spc, hist_db, report = run_spc_pipeline(
             params, make_step, opt, opt_debias, batch_fn,
             spc_steps=args.steps, debias_steps=args.debias_steps,

@@ -27,14 +27,16 @@ the ``CompressionPlan`` dense fallback.
 from __future__ import annotations
 
 import dataclasses
+import re
 from functools import partial
-from typing import Any, Optional
+from typing import Any, Callable, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.sparse.formats import BlockCSR, dense_to_bcsr, pad_bcsr
+from repro.core import prox as prox_lib
+from repro.sparse.formats import BlockCSR, bcsr_to_dense, dense_to_bcsr, pad_bcsr
 
 PyTree = Any
 
@@ -200,6 +202,13 @@ def _try_compress(arr: np.ndarray, path: str, plan: CompressionPlan,
     grid = int(np.prod(ms[0].block_grid))
     if min(1.0 - m.n_blocks / max(grid, 1) for m in ms) < plan.min_sparsity:
         return None
+    # Zero-slot edge case: an all-zero (fully pruned / fully group-l1'd)
+    # slice yields n_blocks == 0 — only the pad slot 0 exists. That is a
+    # VALID empty BCSR (gather tables are all-pad, the kernel returns 0),
+    # and padding it up alongside non-empty slices is also fine because
+    # pad_bcsr only appends zero blocks + pad gather entries. The one
+    # hazard is gradient flow to pad slots, which bsr_sddmm masks via
+    # slot_coordinates' validity vector.
     n_slots = max(m.data.shape[0] for m in ms)
     jmax = max(m.gather_idx.shape[1] for m in ms)
     jmax_t = max(m.gather_t_idx.shape[1] for m in ms)
@@ -262,6 +271,154 @@ def compress_params(params: PyTree,
 
 
 # ---------------------------------------------------------------------------
+# Plan-aligned training prox (SpC-Retrain: train *into* the BCSR grid)
+# ---------------------------------------------------------------------------
+
+_ATTN_QKV = ("wq", "wk", "wv")
+
+
+def _norm_keystr(path: str) -> str:
+    """jax keystr "['layers']['b0_attn']['mlp']['wi']" -> "layers/b0_attn/mlp/wi"
+    (the path format ``CompressionPlan.block_for`` and this module use)."""
+    parts = re.findall(r"\['([^']+)'\]", path)
+    return "/".join(parts) if parts else path.strip("/").lstrip(".")
+
+
+def make_plan_prox(plan: CompressionPlan) -> Callable:
+    """Path-aware block group-l1 prox on the SAME (out, in) grid
+    ``compress_params`` tiles.
+
+    The optimizer's prox sees weights in their *stored* layouts (stacked
+    (L, d, ff) MLPs, (L, d, h, hd) attention, ...) while the BCSR grid lives
+    on the 2D (out, in) view. Block partitions map through transpose, so
+    shrinking (bc, br) tiles of the flattened (in, out) view is exactly the
+    plan's (br, bc) group-l1 on (out, in): whole blocks of the serving grid
+    hit exact zero during training and ``compress_params`` then needs no
+    prune step. Non-plan-eligible leaves (embeddings, leaves under
+    ``min_size``, ...) are left UNTOUCHED: the group-l1 lambda is calibrated
+    against block norms (~sqrt(block_size) larger than element magnitudes),
+    so an elementwise-l1 fallback at the same lambda would annihilate e.g. a
+    tied embedding/head in one step.
+
+    Returned callable has signature ``prox_fn(z, tau, path="")`` — the
+    ``path`` keyword is how ``ProxOptimizer`` detects path-awareness.
+    """
+
+    def prox_fn(z, tau, path: str = ""):
+        p = _norm_keystr(path)
+        leaf = p.rsplit("/", 1)[-1]
+        stacked = p.startswith("layers/")
+        nd = z.ndim - (1 if stacked else 0)     # per-layer rank
+        wrapped = f"/{p}/"
+        eligible = (
+            ("/attn/" in wrapped and leaf in _LAYER_TARGETS["attn"]
+             and nd in (2, 3))
+            or ("/mlp/" in wrapped and leaf in _LAYER_TARGETS["mlp"]
+                and nd == 2)
+            or (leaf == "head" and nd == 2))
+        if not eligible:
+            return z
+        br, bc = plan.block_for(p)
+
+        def one(zi):
+            shp = zi.shape
+            if zi.ndim == 3 and leaf in _ATTN_QKV:     # (d, h, hd): in, out
+                flat = zi.reshape(shp[0], -1)
+            elif zi.ndim == 3:                         # attn wo (h, hd, d)
+                flat = zi.reshape(-1, shp[-1])
+            else:                                      # 2D stored (in, out)
+                flat = zi
+            if flat.size < plan.min_size:
+                return zi
+            # (in, out) view with transposed tiles == plan grid on (out, in)
+            return prox_lib.prox_group_l1_blocks(
+                flat, tau, block=(bc, br)).reshape(shp)
+
+        return jax.vmap(one)(z) if stacked else one(z)
+
+    return prox_fn
+
+
+# ---------------------------------------------------------------------------
+# Mask-frozen retraining from a compressed model (paper §2.4 debias)
+# ---------------------------------------------------------------------------
+
+def _path_str(path) -> str:
+    return "/".join(str(getattr(k, "key", getattr(k, "name", k)))
+                    for k in path)
+
+
+def split_trainable(cp: CompressedParams):
+    """Split a ``CompressedParams`` into (trainable pytree, rebuild fn).
+
+    ``trainable = {"dense": residue, "bcsr_data": {path: BlockCSR.data}}``
+    contains only float arrays, so it can be handed straight to
+    ``jax.value_and_grad`` / a ``ProxOptimizer``; ``rebuild(trainable)``
+    plants the (possibly updated) data blocks back into the BlockCSR
+    structures. Index/gather tables are closure constants: retraining *from*
+    a compressed checkpoint updates only resident block data (+ the dense
+    residue) — the sparsity pattern is frozen by construction, and
+    ``masks.zero_mask(trainable)`` additionally freezes intra-block zeros
+    and pad slots.
+    """
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cp.sparse,
+                                                         is_leaf=_is_bcsr)
+    data = {_path_str(path): leaf.data for path, leaf in flat}
+    trainable = {"dense": cp.dense, "bcsr_data": data}
+    plan = cp.plan
+    # keep only the index/gather structure in the closure (zero-size data
+    # slice): rebuild always overwrites data, and retaining the original
+    # blocks would pin a second full copy of the compressed weights for the
+    # whole debias phase
+    structs = [(path, dataclasses.replace(leaf, data=leaf.data[:0]))
+               for path, leaf in flat]
+
+    def rebuild(tr) -> CompressedParams:
+        leaves = [dataclasses.replace(leaf, data=tr["bcsr_data"][_path_str(p)])
+                  for p, leaf in structs]
+        sparse = jax.tree_util.tree_unflatten(treedef, leaves)
+        return CompressedParams(dense=tr["dense"], sparse=sparse, plan=plan)
+
+    return trainable, rebuild
+
+
+def densify_compressed(cp: CompressedParams, like: PyTree) -> PyTree:
+    """Inverse of ``compress_params``: scatter BCSR blocks back into a dense
+    param tree shaped like ``like`` (the mask-frozen dense reference used to
+    validate debiased compressed logits; host-side, test/debug only).
+
+    Values come from ``cp`` — the residue from ``cp.dense`` and the
+    compressed projections from the BCSR blocks; ``like`` only supplies the
+    stored shapes that the zero-size placeholders erased."""
+    def merge(l, d):
+        da = np.asarray(d)
+        if da.shape != np.shape(np.asarray(l)):      # placeholder: use like
+            return np.asarray(l).copy()
+        return da.copy()
+
+    out = jax.tree.map(merge, like, cp.dense)
+
+    def to_stored(m: BlockCSR, path: str, orig_shape, idx=None):
+        sl = m if idx is None else jax.tree.map(lambda a: a[idx], m)
+        mat = np.asarray(bcsr_to_dense(sl))[:m.shape[0], :m.shape[1]]
+        return _from_out_in(path, mat, orig_shape)
+
+    for name, m in iter_bcsr(cp):
+        keys = name.split("/")
+        tgt = out
+        for k in keys[:-1]:
+            tgt = tgt[k]
+        ref = tgt[keys[-1]]
+        if keys[0] == "layers":                 # stacked over n_super
+            tgt[keys[-1]] = np.stack(
+                [to_stored(m, name, ref.shape[1:], i)
+                 for i in range(ref.shape[0])]).astype(ref.dtype)
+        else:
+            tgt[keys[-1]] = to_stored(m, name, ref.shape).astype(ref.dtype)
+    return jax.tree.map(jnp.asarray, out)
+
+
+# ---------------------------------------------------------------------------
 # Accounting
 # ---------------------------------------------------------------------------
 
@@ -270,9 +427,7 @@ def iter_bcsr(cp: CompressedParams):
     flat, _ = jax.tree_util.tree_flatten_with_path(cp.sparse, is_leaf=_is_bcsr)
     for path, leaf in flat:
         if _is_bcsr(leaf):
-            name = "/".join(str(getattr(k, "key", getattr(k, "name", k)))
-                            for k in path)
-            yield name, leaf
+            yield _path_str(path), leaf
 
 
 def compressed_size_bytes(cp: CompressedParams) -> int:
@@ -282,6 +437,13 @@ def compressed_size_bytes(cp: CompressedParams) -> int:
                 for leaf in jax.tree.leaves(cp.dense))
     total += sum(m.nbytes for _, m in iter_bcsr(cp))
     return int(total)
+
+
+def format_size_report(dense_bytes: int, bcsr_bytes: int) -> str:
+    """One-line dense-vs-BCSR byte report (shared by serve/train CLIs)."""
+    return (f"model size dense={dense_bytes/2**20:.2f}MB "
+            f"bcsr={bcsr_bytes/2**20:.2f}MB "
+            f"({dense_bytes/max(bcsr_bytes, 1):.1f}x)")
 
 
 def compression_summary(cp: CompressedParams) -> str:

@@ -1,16 +1,35 @@
 """Sparse op dispatch: Pallas kernel vs pure-jnp reference.
 
-``sparse_matmul(x, w)`` is the serving-path matmul on compressed weights.
-Backend selection:
-  'pallas'    — the TPU kernel (interpret mode on CPU),
-  'ref'       — densify + jnp (oracle; also the fastest choice on CPU),
+``sparse_matmul(x, w)`` is the matmul on compressed weights, used by BOTH the
+serving path (forward only) and SpC-Retrain (paper §2.4, compressed
+retraining). It carries a full ``custom_vjp``:
+
+  forward   y  = x @ W'      (dense x compressed', bsr_spmm kernel)
+  backward  dx = dy @ W      (dense x compressed, transposed gather tables)
+            dw = SDDMM       (kernels/bsr_sddmm: gradients ONLY at the
+                              resident BCSR slots — never a dense (out, in)
+                              materialization, so compressed retraining's
+                              FLOPs/bytes scale with nnz blocks)
+
+Backend selection (shared by forward and backward so serve and train hit the
+same kernel — ``resolve_backend`` is the single point of truth):
+  'pallas'    — the TPU kernels (interpret mode on CPU),
+  'ref'       — densify + jnp for the spmm products (oracle; fastest on CPU).
+                The dw product still goes through the SDDMM kernel: the ref
+                spmm densifies the *weight*, but the weight *gradient* is
+                never materialized dense on any backend,
   'auto'      — pallas on TPU, ref elsewhere.
 """
 from __future__ import annotations
 
+import dataclasses
+import functools
+
 import jax
 import jax.numpy as jnp
+import numpy as np
 
+from repro.kernels.bsr_sddmm import ops as sddmm_kops
 from repro.kernels.bsr_spmm import ops as kops
 from repro.sparse.formats import BlockCSR
 
@@ -19,23 +38,79 @@ def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
-def sparse_matmul(x, w: BlockCSR, backend: str = "auto"):
-    """y = x @ w.T for BlockCSR w (paper forward dense x compressed')."""
+def resolve_backend(backend: str) -> str:
+    """'auto' -> pallas on TPU, ref elsewhere; validates explicit choices.
+
+    Both ``sparse_matmul`` and ``sparse_matmul_t`` (and the custom VJP that
+    ties them together) resolve through here, so the forward serving kernel
+    and the training backward always agree."""
     if backend == "auto":
-        backend = "pallas" if _on_tpu() else "ref"
+        return "pallas" if _on_tpu() else "ref"
+    if backend not in ("pallas", "ref"):
+        raise ValueError(f"unknown sparse backend {backend!r}")
+    return backend
+
+
+def _fwd_product(x, w: BlockCSR, backend: str):
     if backend == "pallas":
-        return kops.spmm_ad(x, w)
-    if backend == "ref":
-        return kops.spmm_fwd_ref(x, w).astype(x.dtype)
-    raise ValueError(backend)
+        return kops.spmm(x, w)
+    return kops.spmm_fwd_ref(x, w).astype(x.dtype)
+
+
+def _bwd_dx_product(dy, w: BlockCSR, backend: str):
+    if backend == "pallas":
+        return kops.spmm_t(dy, w)
+    return kops.spmm_bwd_ref(dy, w).astype(dy.dtype)
+
+
+def _zero_cotangent(a):
+    """Zero cotangent for a BlockCSR side array (float0 for int indices)."""
+    if jnp.issubdtype(a.dtype, jnp.inexact):
+        return jnp.zeros_like(a)
+    return np.zeros(a.shape, jax.dtypes.float0)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _sparse_matmul(backend: str, x, w: BlockCSR):
+    return _fwd_product(x, w, backend)
+
+
+def _sparse_matmul_fwd(backend, x, w):
+    return _fwd_product(x, w, backend), (x, w)
+
+
+def _sparse_matmul_bwd(backend, res, dy):
+    x, w = res
+    dx = _bwd_dx_product(dy, w, backend).astype(x.dtype)
+    # dw via SDDMM at the resident slots only: (n_slots, br, bc) aligned
+    # with w.data. The kernel runs in interpret mode off-TPU; there is no
+    # dense (out, in) intermediate on any backend.
+    dw_data = sddmm_kops.bsr_weight_grad(x, dy, w).astype(w.data.dtype)
+    dw = BlockCSR(
+        data=dw_data,
+        col_idx=_zero_cotangent(w.col_idx),
+        row_ptr=_zero_cotangent(w.row_ptr),
+        gather_idx=_zero_cotangent(w.gather_idx),
+        gather_blk=_zero_cotangent(w.gather_blk),
+        gather_nnz=_zero_cotangent(w.gather_nnz),
+        gather_t_idx=_zero_cotangent(w.gather_t_idx),
+        gather_t_blk=_zero_cotangent(w.gather_t_blk),
+        gather_t_nnz=_zero_cotangent(w.gather_t_nnz),
+        shape=w.shape, block=w.block, n_blocks=w.n_blocks)
+    return dx, dw
+
+
+_sparse_matmul.defvjp(_sparse_matmul_fwd, _sparse_matmul_bwd)
+
+
+def sparse_matmul(x, w: BlockCSR, backend: str = "auto"):
+    """y = x @ w.T for BlockCSR w (paper forward dense x compressed').
+
+    Differentiable in x (dense x compressed backward) AND in w.data (SDDMM
+    masked weight gradient) — the compressed-retraining path."""
+    return _sparse_matmul(resolve_backend(backend), x, w)
 
 
 def sparse_matmul_t(dy, w: BlockCSR, backend: str = "auto"):
     """dx = dy @ w (paper backward dense x compressed)."""
-    if backend == "auto":
-        backend = "pallas" if _on_tpu() else "ref"
-    if backend == "pallas":
-        return kops.spmm_t(dy, w)
-    if backend == "ref":
-        return kops.spmm_bwd_ref(dy, w).astype(dy.dtype)
-    raise ValueError(backend)
+    return _bwd_dx_product(dy, w, resolve_backend(backend))

@@ -11,6 +11,23 @@ Responsibilities:
     and flags stragglers (> k*median) for the operator,
   * compression pipeline: ``run_spc_pipeline`` = sparse-coding training then
     mask-frozen debias retraining (paper §2.4), each phase resumable.
+
+SpC-Retrain (``run_spc_retrain_pipeline``) — the fully compressed variant of
+the paper's pipeline, where training produces block sparsity directly and
+retraining runs *on the compressed representation*:
+
+    SpC training                    compress                 debias retrain
+    ┌─────────────────────┐   ┌───────────────────┐   ┌─────────────────────┐
+    │ prox-opt, group-l1  │   │ compress_params   │   │ masks frozen to the │
+    │ on the plan's       │──▶│ (NO prune step:   │──▶│ CompressedParams:   │
+    │ (out, in) BCSR grid │   │ zeros came from   │   │ only BlockCSR.data  │
+    │ → exact zero blocks │   │ training)         │   │ updates, dw via     │
+    └─────────────────────┘   └───────────────────┘   │ SDDMM at resident   │
+                                                      │ slots only          │
+                                                      └──────────┬──────────┘
+                                                                 ▼
+                                          compressed checkpoint, servable by
+                                          ``launch/serve --sparse`` (BCSR)
 """
 from __future__ import annotations
 
@@ -27,6 +44,8 @@ from repro.checkpoint.checkpointer import Checkpointer
 from repro.core import masks as masks_lib
 from repro.core import metrics as metrics_lib
 from repro.core.optimizers import ProxOptimizer
+from repro.sparse.compress import (CompressionPlan, compress_params,
+                                   compressed_size_bytes, split_trainable)
 from repro.train.state import TrainState
 
 log = logging.getLogger("repro.train")
@@ -127,3 +146,54 @@ def run_spc_pipeline(params,
         state, hist_db = train_loop(step_db, state, batch_fn, cfg, None)
         report["debias"] = metrics_lib.total_compression(state.params)
     return state, hist_spc, hist_db, report
+
+
+def run_spc_retrain_pipeline(params,
+                             make_train_step: Callable,
+                             opt_spc: ProxOptimizer,
+                             opt_debias: ProxOptimizer,
+                             batch_fn: Callable[[int], dict],
+                             spc_steps: int,
+                             debias_steps: int,
+                             plan: CompressionPlan,
+                             checkpointer: Optional[Checkpointer] = None,
+                             log_every: int = 50):
+    """SpC -> compress -> mask-frozen debias ON the compressed params.
+
+    ``opt_spc`` should carry the plan-aligned group-l1 prox
+    (``sparse.compress.make_plan_prox(plan)``) so whole (out, in) blocks hit
+    exact zero during training — compression then needs no prune step. The
+    debias phase retrains *from* the compressed model: the trainable tree is
+    ``split_trainable``'s {dense residue, BlockCSR.data} view, masks are
+    frozen to the compressed zero pattern, and the weight gradient reaches
+    BlockCSR.data through ``sparse_matmul``'s SDDMM backward (resident
+    slots only, never densified).
+
+    ``make_train_step(opt, param_transform=None)`` must forward the
+    transform to ``train.step.make_train_step``. Returns
+    (compressed_params, hist_spc, hist_db, report).
+    """
+    step_spc = make_train_step(opt_spc)
+    state = TrainState.create(params, opt_spc)
+    cfg = LoopConfig(total_steps=spc_steps, log_every=log_every)
+    state, hist_spc = train_loop(step_spc, state, batch_fn, cfg, checkpointer)
+    report = {"spc": metrics_lib.total_compression(state.params)}
+
+    cp = compress_params(state.params, plan)
+    dense_bytes = sum(int(l.size) * l.dtype.itemsize
+                      for l in jax.tree.leaves(state.params))
+    report["bcsr_bytes"] = compressed_size_bytes(cp)
+    report["dense_bytes"] = dense_bytes
+
+    hist_db: list[dict] = []
+    if debias_steps:
+        trainable, rebuild = split_trainable(cp)
+        mask = masks_lib.zero_mask(trainable)
+        st = TrainState(params=trainable,
+                        opt_state=opt_debias.init(trainable),
+                        mask=mask, step=jnp.zeros((), jnp.int32))
+        step_db = make_train_step(opt_debias, param_transform=rebuild)
+        cfg = LoopConfig(total_steps=debias_steps, log_every=log_every)
+        st, hist_db = train_loop(step_db, st, batch_fn, cfg, None)
+        cp = rebuild(st.params)
+    return cp, hist_spc, hist_db, report

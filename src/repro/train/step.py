@@ -25,13 +25,22 @@ PyTree = Any
 
 
 def make_loss_fn(model, aux_weight: float = 1e-2,
-                 loss_seq_chunk: int = 0) -> Callable:
+                 loss_seq_chunk: int = 0,
+                 param_transform: Optional[Callable] = None) -> Callable:
     """loss_seq_chunk > 0: compute head+loss in sequence chunks so the
     (B, S, vocab) logits tensor is never materialized (decisive for the
     256k-vocab archs — see EXPERIMENTS.md §Perf iteration C1). Each chunk is
-    rematted so backward recomputes its logits instead of saving them."""
+    rematted so backward recomputes its logits instead of saving them.
+
+    ``param_transform`` maps the *trainable* pytree to what the model
+    consumes before the forward (pure restructuring; grads flow through).
+    Used by SpC-Retrain's debias phase, where the trainable tree is
+    ``sparse.compress.split_trainable``'s {dense residue, BlockCSR.data}
+    view and the transform rebuilds the ``CompressedParams``."""
 
     def loss_fn(params, batch):
+        if param_transform is not None:
+            params = param_transform(params)
         if not loss_seq_chunk or batch["labels"].shape[1] <= loss_seq_chunk:
             logits, aux = model.apply_train(params, batch)
             loss = next_token_loss(logits, batch["labels"])
@@ -61,8 +70,10 @@ def make_loss_fn(model, aux_weight: float = 1e-2,
 def make_train_step(model, opt: ProxOptimizer,
                     microbatches: int = 1,
                     aux_weight: float = 1e-2,
-                    loss_seq_chunk: int = 0) -> Callable:
-    loss_fn = make_loss_fn(model, aux_weight, loss_seq_chunk=loss_seq_chunk)
+                    loss_seq_chunk: int = 0,
+                    param_transform: Optional[Callable] = None) -> Callable:
+    loss_fn = make_loss_fn(model, aux_weight, loss_seq_chunk=loss_seq_chunk,
+                           param_transform=param_transform)
     grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
 
     cdt = {"bfloat16": jnp.bfloat16, "float16": jnp.float16,
