@@ -108,24 +108,29 @@ def run(steps: int = STEPS):
 
 
 def decode_compressed_row(gen_steps: int = 8):
-    """Whole-model dense vs compressed decode through the serving runtime:
-    the transformer decode loop running on ``CompressedParams`` (BCSR
-    attention/MLP projections) vs the same pruned weights served dense."""
+    """Whole-model dense vs BCSR vs PaletteBCSR decode through the serving
+    runtime: the transformer decode loop running on ``CompressedParams``
+    (BCSR attention/MLP projections), its 8-bit palette-quantized form
+    (Deep Compression stage 2), and the same pruned weights served dense —
+    real serving bytes and tokens/s for all three."""
     import jax
 
     from repro.models.model_zoo import build
     from repro.serve.step import generate
     from repro.sparse.compress import (CompressionPlan, compress_params,
                                        compressed_size_bytes,
-                                       prune_blocks_for_plan)
+                                       prune_blocks_for_plan,
+                                       quantize_compressed)
 
     model = build("smollm-360m", reduced=True)
     params = model.init(jax.random.PRNGKey(0))
     plan = CompressionPlan(block=(8, 64), min_sparsity=0.5)
     pruned = prune_blocks_for_plan(params, plan, 0.85)
     cp = compress_params(pruned, plan)
+    qcp = quantize_compressed(cp, bits=8)
     dense_b = sum(l.size * l.dtype.itemsize for l in jax.tree.leaves(pruned))
     comp_b = compressed_size_bytes(cp)
+    pal_b = compressed_size_bytes(qcp)
 
     import jax.numpy as jnp
 
@@ -151,15 +156,21 @@ def decode_compressed_row(gen_steps: int = 8):
         jax.block_until_ready(run_once(p))
         return time.perf_counter() - t0
 
-    dense_t, comp_t = timed(pruned), timed(cp)
+    dense_t, comp_t, pal_t = timed(pruned), timed(cp), timed(qcp)
     n_tok = prompt.shape[0] * gen_steps
     return {"name": "inference_speedup/decode_dense_vs_compressed",
             "us_per_call": comp_t / n_tok * 1e6,
             "derived": (f"dense_us_tok={dense_t/n_tok*1e6:.1f},"
                         f"compressed_us_tok={comp_t/n_tok*1e6:.1f},"
+                        f"palette8_us_tok={pal_t/n_tok*1e6:.1f},"
+                        f"dense_tok_s={n_tok/dense_t:.1f},"
+                        f"bcsr_tok_s={n_tok/comp_t:.1f},"
+                        f"palette8_tok_s={n_tok/pal_t:.1f},"
                         f"dense_kb={dense_b/1024:.0f},"
                         f"bcsr_kb={comp_b/1024:.0f},"
-                        f"size_ratio={dense_b/comp_b:.2f}x")}
+                        f"palette8_kb={pal_b/1024:.0f},"
+                        f"size_ratio={dense_b/comp_b:.2f}x,"
+                        f"palette_ratio={dense_b/pal_b:.2f}x")}
 
 
 if __name__ == "__main__":

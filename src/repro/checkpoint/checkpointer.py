@@ -13,10 +13,12 @@ Properties required by the 1000+-node story (DESIGN.md §5):
   sparsity exceeds a threshold are stored as elementwise CSR (one-way:
   densified on restore), cutting checkpoint bytes by the paper's compression
   factor — the paper's 'model size' win applied to the training artifact.
-  Native **BlockCSR leaves** (e.g. inside a ``CompressedParams`` serving
-  tree) round-trip losslessly: their arrays + metas are stored verbatim and
-  restore rebuilds the BlockCSR without densifying, so a compressed
-  checkpoint restores straight into the compressed-model runtime.
+  Native **BlockCSR and PaletteBCSR leaves** (e.g. inside a
+  ``CompressedParams`` serving tree) round-trip losslessly: their arrays +
+  metas are stored verbatim and restore rebuilds the format without
+  densifying (quantized stores stay uint8/nibble-packed on disk and at
+  load), so a compressed checkpoint restores straight into the
+  compressed-model runtime.
 * **Retention + resume**: keep_n newest checkpoints; ``latest_step`` scans
   the directory so a restarted job resumes from the newest complete write.
 
@@ -35,19 +37,22 @@ import jax
 import numpy as np
 
 from repro.core.prox import default_regularized_predicate
-from repro.sparse.formats import BlockCSR, dense_to_csr
+from repro.sparse.formats import BlockCSR, PaletteBCSR, dense_to_csr
 
 PyTree = Any
 _SPARSE_THRESHOLD = 0.7      # store CSR when >= 70% zero
 
-# BlockCSR array fields persisted verbatim for the round-trip path
-_BCSR_FIELDS = ("data", "col_idx", "row_ptr",
-                "gather_idx", "gather_blk", "gather_nnz",
-                "gather_t_idx", "gather_t_blk", "gather_t_nnz")
+# BlockCSR / PaletteBCSR array fields persisted verbatim for the round-trip
+# path (index/gather tables are shared between the two formats)
+_INDEX_FIELDS = ("col_idx", "row_ptr",
+                 "gather_idx", "gather_blk", "gather_nnz",
+                 "gather_t_idx", "gather_t_blk", "gather_t_nnz")
+_BCSR_FIELDS = ("data",) + _INDEX_FIELDS
+_PBCSR_FIELDS = ("codes", "palette") + _INDEX_FIELDS
 
 
 def _is_bcsr(x) -> bool:
-    return isinstance(x, BlockCSR)
+    return isinstance(x, (BlockCSR, PaletteBCSR))
 
 
 def _key_name(k) -> str:
@@ -82,14 +87,21 @@ class Checkpointer:
                                 "extra": extra or {}, "leaves": []}
         for name, leaf in zip(names, leaves):
             if _is_bcsr(leaf):
-                # native compressed leaf: store the BCSR arrays verbatim —
-                # restore rebuilds the BlockCSR without densifying
-                entry = {"name": name, "format": "bcsr",
+                # native compressed leaf: store the BCSR/PaletteBCSR arrays
+                # verbatim — restore rebuilds the format without densifying
+                # (quantized checkpoints stay quantized on disk AND at load)
+                quant = isinstance(leaf, PaletteBCSR)
+                fields = _PBCSR_FIELDS if quant else _BCSR_FIELDS
+                entry = {"name": name,
+                         "format": "palette_bcsr" if quant else "bcsr",
                          "shape": list(leaf.shape),
                          "block": list(leaf.block),
                          "n_blocks": int(leaf.n_blocks),
-                         "dtype": str(np.asarray(leaf.data).dtype)}
-                for f in _BCSR_FIELDS:
+                         "dtype": str(np.asarray(
+                             leaf.palette if quant else leaf.data).dtype)}
+                if quant:
+                    entry["bits"] = int(leaf.bits)
+                for f in fields:
                     arrays[f"{name}__{f}"] = np.asarray(
                         jax.device_get(getattr(leaf, f)))
                 manifest["leaves"].append(entry)
@@ -169,6 +181,9 @@ class Checkpointer:
             if e["format"] == "bcsr":
                 out.append(_bcsr_restore(npz, name, e))
                 continue
+            if e["format"] == "palette_bcsr":
+                out.append(_pbcsr_restore(npz, name, e))
+                continue
             if e["format"] == "csr":
                 arr = _csr_restore(npz, name, tuple(e["shape"]),
                                    np.dtype(e["dtype"]))
@@ -219,6 +234,8 @@ class Checkpointer:
                     f"launch/train --sparse?)")
             if e["format"] == "bcsr":
                 leaf = _bcsr_restore(npz, name, e)
+            elif e["format"] == "palette_bcsr":
+                leaf = _pbcsr_restore(npz, name, e)
             elif e["format"] == "csr":
                 leaf = jnp.asarray(_csr_restore(npz, name, tuple(e["shape"]),
                                                 np.dtype(e["dtype"])))
@@ -233,11 +250,17 @@ class Checkpointer:
         spec = (manifest.get("extra") or {}).get("plan")
         plan = CompressionPlan()
         if spec:
+            # .get defaults keep checkpoints written before the quantization
+            # fields existed loadable
             plan = CompressionPlan(
                 block=tuple(spec["block"]),
                 min_sparsity=spec["min_sparsity"],
                 min_size=spec["min_size"],
-                overrides=tuple((s, tuple(b)) for s, b in spec["overrides"]))
+                overrides=tuple((s, tuple(b)) for s, b in spec["overrides"]),
+                quantize_bits=spec.get("quantize_bits"),
+                quantize_overrides=tuple(
+                    (s, int(b))
+                    for s, b in spec.get("quantize_overrides", ())))
         return CompressedParams(dense=roots["dense"], sparse=roots["sparse"],
                                 plan=plan)
 
@@ -254,6 +277,18 @@ def _bcsr_restore(npz, name, entry) -> BlockCSR:
             for f in _BCSR_FIELDS}
     return BlockCSR(shape=tuple(entry["shape"]), block=tuple(entry["block"]),
                     n_blocks=int(entry["n_blocks"]), **arrs)
+
+
+def _pbcsr_restore(npz, name, entry) -> PaletteBCSR:
+    """Rebuild a PaletteBCSR leaf from its stored arrays — codes stay
+    quantized (and nibble-packed at 4 bits) from disk into serving memory."""
+    import jax.numpy as jnp
+    arrs = {f: jnp.asarray(npz[f"{name}__{f}".replace("/", "|")])
+            for f in _PBCSR_FIELDS}
+    return PaletteBCSR(shape=tuple(entry["shape"]),
+                       block=tuple(entry["block"]),
+                       n_blocks=int(entry["n_blocks"]),
+                       bits=int(entry["bits"]), **arrs)
 
 
 def _csr_restore(npz, name, shape, dtype):

@@ -11,6 +11,11 @@ prune → quantize → encode pipeline is available:
 k-means runs per layer over nonzero weights only (jit'd Lloyd iterations);
 ``quantized_size_bytes`` reports CSR + palette-index + Huffman-estimated
 bytes (entropy bound, the standard accounting).
+
+This module is the *offline estimate* half; the servable quantized format
+is ``sparse/formats.PaletteBCSR``, built by ``sparse.compress.quantize_bcsr``
+on top of ``kmeans_palette`` — see docs/size_accounting.md for how the two
+accountings relate.
 """
 from __future__ import annotations
 
@@ -27,29 +32,61 @@ PyTree = Any
 
 
 def kmeans_palette(w: jax.Array, n_clusters: int, iters: int = 25,
-                   seed: int = 0):
+                   seed: int = 0, chunk: int = 1 << 15):
     """Lloyd k-means over the NONZERO entries of w. Returns (palette,
-    quantized w with zeros preserved)."""
+    quantized w with zeros preserved, per-entry cluster assignment).
+
+    Host-side (called at compression time, not inside a jitted step). The
+    assignment step is chunked so peak memory is O(chunk * n_clusters), not
+    O(n_entries * n_clusters) — at 255 clusters a full distance matrix over
+    a production-size projection would be tens of GB.
+
+    Edge cases:
+      * all-zero w (a fully pruned layer / empty BCSR slice): nothing to
+        cluster — returns a zero palette, w unchanged, all assignments 0;
+      * fewer nonzeros (or fewer distinct values) than clusters: empty
+        clusters keep their linspace init and simply go unused — the
+        occupied clusters converge onto the data exactly.
+    """
     flat = w.reshape(-1).astype(jnp.float32)
     nz_mask = flat != 0
+    if not bool(jnp.any(nz_mask)):
+        return (jnp.zeros((n_clusters,), jnp.float32),
+                jnp.zeros_like(w),
+                jnp.zeros(flat.shape, jnp.int32))
     # linear init over the nonzero range (Han et al.'s best-performing init)
     lo = jnp.min(jnp.where(nz_mask, flat, jnp.inf))
     hi = jnp.max(jnp.where(nz_mask, flat, -jnp.inf))
     palette = jnp.linspace(lo, hi, n_clusters)
 
+    n = flat.shape[0]
+    chunk = min(chunk, n)
+    pad = (-n) % chunk
+    fc = jnp.pad(flat, (0, pad)).reshape(-1, chunk)
+    mc = jnp.pad(nz_mask, (0, pad)).reshape(-1, chunk)   # pad entries masked
+
     def step(palette, _):
-        d = jnp.abs(flat[:, None] - palette[None, :])
-        assign = jnp.argmin(d, axis=1)
-        oh = jax.nn.one_hot(assign, n_clusters, dtype=jnp.float32)
-        oh = oh * nz_mask[:, None]
-        sums = oh.T @ flat
-        counts = jnp.sum(oh, axis=0)
+        def per_chunk(carry, xs):
+            sums, counts = carry
+            f, msk = xs
+            a = jnp.argmin(jnp.abs(f[:, None] - palette[None, :]), axis=1)
+            oh = jax.nn.one_hot(a, n_clusters, dtype=jnp.float32)
+            oh = oh * msk[:, None]
+            return (sums + oh.T @ f, counts + jnp.sum(oh, axis=0)), None
+
+        zero = jnp.zeros((n_clusters,), jnp.float32)
+        (sums, counts), _ = jax.lax.scan(per_chunk, (zero, zero), (fc, mc))
         new = jnp.where(counts > 0, sums / jnp.maximum(counts, 1), palette)
         return new, None
 
     palette, _ = jax.lax.scan(step, palette, None, length=iters)
-    d = jnp.abs(flat[:, None] - palette[None, :])
-    assign = jnp.argmin(d, axis=1)
+
+    def assign_chunk(_, f):
+        return None, jnp.argmin(jnp.abs(f[:, None] - palette[None, :]),
+                                axis=1)
+
+    _, assign = jax.lax.scan(assign_chunk, None, fc)
+    assign = assign.reshape(-1)[:n]
     q = jnp.where(nz_mask, palette[assign], 0.0)
     return palette, q.reshape(w.shape).astype(w.dtype), assign
 

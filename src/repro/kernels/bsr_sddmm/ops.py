@@ -13,9 +13,22 @@ import jax.numpy as jnp
 
 from repro.kernels.bsr_sddmm.bsr_sddmm import sddmm_block_grad
 from repro.kernels.bsr_sddmm import ref as ref_lib
-from repro.sparse.formats import BlockCSR
+from repro.sparse.formats import BlockCSR, PaletteBCSR
 
 _INTERPRET = True   # CPU container default
+
+
+def _reject_palette(w):
+    """Palette-quantized weights are a serving-only format: the SDDMM weight
+    gradient targets fp block data, which a code/palette store doesn't have.
+    Mask-frozen (debias) retraining must run on the BlockCSR form BEFORE
+    quantization (``sparse.compress.quantize_compressed`` is the last
+    pipeline stage; ``dequantize_compressed`` goes back if needed)."""
+    if isinstance(w, PaletteBCSR):
+        raise TypeError(
+            "bsr_weight_grad got a PaletteBCSR: quantized weights are not "
+            "trainable — debias before quantize_compressed(), or "
+            "dequantize_compressed() to resume retraining")
 
 
 def slot_coordinates(w: BlockCSR):
@@ -45,6 +58,7 @@ def bsr_weight_grad(x, dy, w: BlockCSR, *, bm: int = 128,
     """x: (M, K) activations; dy: (M, N) output cotangent; w: (N, K) BCSR.
 
     Returns (n_slots, br, bc) f32 gradient blocks for w.data."""
+    _reject_palette(w)
     interpret = _INTERPRET if interpret is None else interpret
     br, bc = w.block
     m = x.shape[0]
@@ -67,6 +81,7 @@ def bsr_weight_grad(x, dy, w: BlockCSR, *, bm: int = 128,
 
 
 def bsr_weight_grad_ref(x, dy, w: BlockCSR):
+    _reject_palette(w)
     rows, cols, valid = slot_coordinates(w)
     br, bc = w.block
     n_pad = w.block_grid[0] * br

@@ -17,6 +17,14 @@ The forward pass consumes the block-CSR gather tables; the backward consumes
 the block-CSC (transposed) tables precomputed on host, avoiding the
 uncoalesced column walk the paper accepts in its Fig. 3 kernel.
 
+``gather_block_matmul_palette`` is the quantized-serving variant (Deep
+Compression stage 2): the block store holds uint8 palette codes (nibble-
+packed at 4 bits) and the per-matrix fp32 palette rides into VMEM as one
+extra (1, 2**bits) operand. Dequantization is fused into the accumulate:
+codes are expanded via a one-hot x palette matvec (MXU-friendly; TPU Mosaic
+has no vector gather), so HBM traffic per block drops 4x/8x while the
+matmul itself is unchanged.
+
 Grid: (M/bm, O/bo, Jmax), J innermost so the output tile stays resident in
 VMEM across the accumulation. Padded gather slots point at data slot 0 (an
 all-zero block), so accumulating them is a no-op and the kernel needs no
@@ -31,6 +39,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+from repro.sparse.formats import unpack_uint4
 
 # jax renamed TPUCompilerParams -> CompilerParams; support both
 _CompilerParams = getattr(pltpu, "CompilerParams",
@@ -56,6 +66,98 @@ def _kernel(nnz_ref, idx_ref, blk_ref,     # scalar-prefetch (SMEM)
         o_ref[...] += jax.lax.dot(
             d.astype(jnp.float32), w.astype(jnp.float32),
             preferred_element_type=jnp.float32).astype(out_dtype)
+
+
+def _palette_kernel(nnz_ref, idx_ref, blk_ref,   # scalar-prefetch (SMEM)
+                    d_ref, c_ref, p_ref, o_ref,   # VMEM tiles
+                    *, transpose_block: bool, bits: int, out_dtype):
+    j = pl.program_id(2)
+    o = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    @pl.when(j < nnz_ref[o])
+    def _acc():
+        d = d_ref[...]
+        codes = c_ref[0]                     # (br, bc) or (br, bc//2) uint8
+        if bits == 4:
+            codes = unpack_uint4(codes)      # pure jnp — one shared copy of
+                                             # the nibble-ordering convention
+        # fused dequant: one-hot(codes) @ palette — a (br*bc, P) x (P,)
+        # matvec instead of a vector gather (which Mosaic lacks); code 0 hits
+        # palette[0] == 0 so intra-block zeros and the pad slot stay exact
+        palette = p_ref[0].astype(jnp.float32)      # (P,)
+        onehot = jax.nn.one_hot(codes.astype(jnp.int32), palette.shape[0],
+                                dtype=jnp.float32)  # (br, bc, P)
+        w = jax.lax.dot_general(onehot, palette,
+                                (((2,), (0,)), ((), ())))
+        if transpose_block:
+            w = w.T
+        o_ref[...] += jax.lax.dot(
+            d.astype(jnp.float32), w,
+            preferred_element_type=jnp.float32).astype(out_dtype)
+
+
+def gather_block_matmul_palette(dense, codes, palette, idx, blk, nnz, *,
+                                out_cols: int,
+                                transpose_block: bool,
+                                bits: int,
+                                bm: int = 128,
+                                out_dtype=jnp.float32,
+                                interpret: bool = False):
+    """Palette-quantized ``gather_block_matmul``: same schedule, the block
+    store holds uint8 codes and the fp32 palette is dequantized in-kernel.
+
+    codes   : (n_slots, br, bc) uint8 at bits=8, (n_slots, br, bc//2) at
+              bits=4 (two nibble codes per byte, low nibble first)
+    palette : (P,) fp32 with palette[0] == 0 (P = 2**bits)
+    """
+    M, Kin = dense.shape
+    n_slots, br, bcs = codes.shape
+    bc = bcs * 2 if bits == 4 else bcs
+    O, jmax = idx.shape
+    b_in, b_out = (bc, br) if transpose_block else (br, bc)
+    assert Kin % b_in == 0 and out_cols % b_out == 0 and M % bm == 0, (
+        dense.shape, codes.shape, out_cols, bm)
+    assert out_cols // b_out == O
+
+    pal2d = palette.reshape(1, -1)
+    grid = (M // bm, O, jmax)
+
+    def d_map(i, o, j, nnz_s, idx_s, blk_s):
+        return (i, idx_s[o, j])
+
+    def c_map(i, o, j, nnz_s, idx_s, blk_s):
+        return (blk_s[o, j], 0, 0)
+
+    def p_map(i, o, j, nnz_s, idx_s, blk_s):
+        return (0, 0)
+
+    def o_map(i, o, j, nnz_s, idx_s, blk_s):
+        return (i, o)
+
+    kernel = functools.partial(_palette_kernel,
+                               transpose_block=transpose_block,
+                               bits=bits, out_dtype=out_dtype)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=3,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((bm, b_in), d_map),
+                pl.BlockSpec((1, br, bcs), c_map),
+                pl.BlockSpec((1, pal2d.shape[1]), p_map),
+            ],
+            out_specs=pl.BlockSpec((bm, b_out), o_map),
+        ),
+        out_shape=jax.ShapeDtypeStruct((M, out_cols), out_dtype),
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(nnz, idx, blk, dense, codes, pal2d)
 
 
 def gather_block_matmul(dense, data, idx, blk, nnz, *,

@@ -13,9 +13,10 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.bsr_spmm.bsr_spmm import gather_block_matmul
+from repro.kernels.bsr_spmm.bsr_spmm import (gather_block_matmul,
+                                             gather_block_matmul_palette)
 from repro.kernels.bsr_spmm import ref as ref_lib
-from repro.sparse.formats import BlockCSR
+from repro.sparse.formats import BlockCSR, PaletteBCSR
 
 _INTERPRET = True  # CPU container: validate in interpret mode (TPU: False)
 
@@ -60,6 +61,25 @@ def spmm_t(dy, w: BlockCSR, *, bm: int = 128, interpret: bool | None = None):
     return dx[:m, :k]
 
 
+@functools.partial(jax.jit, static_argnames=("bm", "interpret"))
+def spmm_palette(x, w: PaletteBCSR, *, bm: int = 128,
+                 interpret: bool | None = None):
+    """Y (M, N) = X (M, K) @ W' for W (N, K) PaletteBCSR — the quantized
+    serving forward. Dequantization (palette lookup, nibble unpack at 4-bit)
+    is fused into the gather-block-matmul kernel."""
+    interpret = _INTERPRET if interpret is None else interpret
+    n, k = w.shape
+    xp, m = _pad_rows(x, bm)
+    k_pad = w.block_grid[1] * w.block[1]
+    if k_pad != xp.shape[1]:
+        xp = jnp.pad(xp, ((0, 0), (0, k_pad - xp.shape[1])))
+    y = gather_block_matmul_palette(
+        xp, w.codes, w.palette, w.gather_idx, w.gather_blk, w.gather_nnz,
+        out_cols=w.block_grid[0] * w.block[0], transpose_block=True,
+        bits=w.bits, bm=bm, interpret=interpret)
+    return y[:m, :n]
+
+
 @jax.custom_vjp
 def spmm_ad(x, w: BlockCSR):
     """Differentiable-in-x spmm (w is a constant serving-time structure)."""
@@ -79,3 +99,4 @@ spmm_ad.defvjp(_fwd, _bwd)
 # re-exported oracles for tests/benches
 spmm_fwd_ref = ref_lib.spmm_fwd_ref
 spmm_bwd_ref = ref_lib.spmm_bwd_ref
+spmm_palette_fwd_ref = ref_lib.spmm_palette_fwd_ref

@@ -18,6 +18,13 @@ def spmm_bwd_ref(dy, w: BlockCSR):
     return dy.astype(jnp.float32) @ wd.astype(jnp.float32)
 
 
+def spmm_palette_fwd_ref(x, w):
+    """Quantized forward oracle: dequantize the palette codes to a BlockCSR
+    then run the fp reference — Y = X @ dequant(W)'. ``w`` is a
+    ``formats.PaletteBCSR``."""
+    return spmm_fwd_ref(x, w.dequantize())
+
+
 def gather_block_matmul_ref(dense, data, idx, blk, nnz, *, out_cols,
                             transpose_block):
     """Direct oracle of the gather-matmul-accumulate schedule itself."""

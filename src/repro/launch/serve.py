@@ -4,18 +4,26 @@ compressed (BCSR) weights — the paper's inference path.
     PYTHONPATH=src python -m repro.launch.serve --arch smollm-360m --reduced \
         --batch 4 --prompt-len 16 --gen 32 --sparse
 
-``--sparse`` block-magnitude-prunes the model on the serving BCSR grid,
-builds ``CompressedParams`` (attention QKV/O, MLP, and untied head as
-BlockCSR; dense fallback for matrices that don't compress) and serves from
-it: every compressed projection dispatches ``sparse_matmul`` on the prefill
-and decode paths, and the reported model size is the real BCSR byte count
-(data + block col_idx + row_ptr), not a hypothetical CSR table.
+``--sparse`` (without a checkpoint) block-magnitude-prunes the random-init
+model on the serving BCSR grid, builds ``CompressedParams`` (attention
+QKV/O, MLP, and untied head as BlockCSR; dense fallback for matrices that
+don't compress) and serves from it: every compressed projection dispatches
+``sparse_matmul`` on the prefill and decode paths. Add ``--quantize-bits
+8|4`` for Deep Compression stage 2: block data is palette-quantized and
+served from ``PaletteBCSR`` (uint8 / nibble-packed codes, palette lookup
+fused into the kernel).
 
-``--ckpt-dir <dir>`` instead loads a compressed checkpoint written by
-``launch/train --sparse`` (SpC-Retrain: trained into BlockCSR, debiased
-with masks frozen) and serves it directly — no pruning, the sparsity came
-from training. The manifest's arch/reduced tags are validated against the
-serve flags.
+``--ckpt-dir <dir>`` instead serves the full trained pipeline's artifact —
+a compressed checkpoint written by ``launch/train --sparse`` (prox-SpC
+trained into BlockCSR, mask-frozen debias retraining on the compressed
+params, optionally palette-quantized) — template-free and without
+densifying; no pruning happens here because the sparsity came from
+training. The manifest's arch/reduced tags are validated against the serve
+flags.
+
+Either way the per-layer size breakdown (``compression_summary``) and the
+one-line dense/bcsr/palette byte report are printed; every number follows
+docs/size_accounting.md.
 """
 from __future__ import annotations
 
@@ -33,7 +41,24 @@ from repro.models.model_zoo import build
 from repro.serve.step import generate
 from repro.sparse.compress import (CompressionPlan, compress_params,
                                    compressed_size_bytes, compression_summary,
-                                   format_size_report, prune_blocks_for_plan)
+                                   format_size_report, iter_bcsr,
+                                   prune_blocks_for_plan)
+from repro.sparse.formats import PaletteBCSR
+
+
+def _report_sizes(cp, dense_b: int):
+    """Per-layer breakdown + one-line byte report (docs/size_accounting.md):
+    ``bcsr`` is always the fp32 BlockCSR total; when any layer is
+    palette-quantized the actual (smaller) serving total is reported as
+    ``palette``."""
+    from repro.sparse.compress import bcsr_equiv_size_bytes
+
+    actual_b = compressed_size_bytes(cp)
+    bcsr_b = bcsr_equiv_size_bytes(cp)
+    quantized = any(isinstance(m, PaletteBCSR) for _, m in iter_bcsr(cp))
+    print(compression_summary(cp))
+    print(format_size_report(dense_b, bcsr_b,
+                             actual_b if quantized else None))
 
 
 def main(argv=None):
@@ -44,7 +69,17 @@ def main(argv=None):
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--gen", type=int, default=32)
     ap.add_argument("--sparse", action="store_true",
-                    help="block-prune, compress to BCSR, and serve from it")
+                    help="serve from the compressed form: with --ckpt-dir, "
+                         "load a launch/train --sparse artifact (prox-SpC "
+                         "trained into BlockCSR, mask-frozen debias, "
+                         "optionally palette-quantized) template-free; "
+                         "without one, block-prune the random init on the "
+                         "serving BCSR grid and compress it")
+    ap.add_argument("--quantize-bits", type=int, default=0, choices=[0, 4, 8],
+                    help="palette-quantize the compressed block data "
+                         "(PaletteBCSR, Deep Compression stage 2) before "
+                         "serving — prune path only; checkpoints carry "
+                         "their own quantization")
     ap.add_argument("--sparsity", type=float, default=0.9,
                     help="fraction of weight blocks pruned before compression")
     ap.add_argument("--block", type=int, nargs=2, default=(8, 128),
@@ -56,6 +91,11 @@ def main(argv=None):
                          "--sparse (looks in <dir>/compressed, then <dir>)")
     ap.add_argument("--temperature", type=float, default=0.0)
     args = ap.parse_args(argv)
+    if args.quantize_bits and (not args.sparse or args.ckpt_dir):
+        raise SystemExit(
+            "--quantize-bits applies to the --sparse prune path only "
+            "(checkpoints carry their own quantization; without --sparse "
+            "nothing is compressed to quantize)")
 
     model = build(args.arch, reduced=args.reduced)
     cfg = model.cfg
@@ -80,24 +120,21 @@ def main(argv=None):
                 f"reduced={extra.get('reduced')} but serve got "
                 f"arch={args.arch!r} reduced={args.reduced}")
         params = ckpt.restore_compressed()
-        bcsr_b = compressed_size_bytes(params)
         # dense byte count from shapes only — don't allocate a dense model
         # just to print the ratio
         shapes = jax.eval_shape(model.init, key)
         dense_b = sum(int(l.size) * l.dtype.itemsize
                       for l in jax.tree.leaves(shapes))
-        print(compression_summary(params))
-        print(format_size_report(dense_b, bcsr_b))
+        _report_sizes(params, dense_b)
     elif args.sparse:
         params = model.init(key)
-        plan = CompressionPlan(block=tuple(args.block),
-                               min_sparsity=args.min_block_sparsity)
+        plan = CompressionPlan(
+            block=tuple(args.block), min_sparsity=args.min_block_sparsity,
+            quantize_bits=args.quantize_bits or None)
         params = prune_blocks_for_plan(params, plan, args.sparsity)
         dense_b = model_size_bytes(params, sparse=False)
-        params = compress_params(params, plan)
-        bcsr_b = compressed_size_bytes(params)
-        print(compression_summary(params))
-        print(format_size_report(dense_b, bcsr_b))
+        params = compress_params(params, plan)   # PaletteBCSR when quantizing
+        _report_sizes(params, dense_b)
     else:
         params = model.init(key)
 

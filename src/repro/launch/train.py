@@ -18,6 +18,11 @@ loads and serves from directly:
     PYTHONPATH=src python -m repro.launch.train --arch smollm-360m --reduced \
         --sparse --steps 60 --debias-steps 20 --compress group_l1:0.05 \
         --block 8 64 --ckpt-dir /tmp/spc
+
+``--quantize-bits 8|4`` adds Deep Compression stage 2 on top: after debias,
+the BlockCSR block data is k-means palette-quantized (``PaletteBCSR``,
+uint8 / nibble-packed codes + per-layer palette) and the compressed
+checkpoint stores — and serving loads — the quantized form directly.
 """
 from __future__ import annotations
 
@@ -39,8 +44,9 @@ from repro.distributed import sharding as shd
 from repro.launch.mesh import make_host_mesh, make_production_mesh
 from repro.models import frontends
 from repro.models.model_zoo import build
-from repro.sparse.compress import (CompressionPlan, compression_summary,
-                                   format_size_report, make_plan_prox)
+from repro.sparse.compress import (CompressionPlan, compressed_size_bytes,
+                                   compression_summary, format_size_report,
+                                   make_plan_prox, quantize_compressed)
 from repro.train.loop import (LoopConfig, run_spc_pipeline,
                               run_spc_retrain_pipeline, train_loop)
 from repro.train.state import TrainState
@@ -72,15 +78,30 @@ def main(argv=None):
                     choices=["none", "single", "multi"])
     ap.add_argument("--log-every", type=int, default=20)
     ap.add_argument("--sparse", action="store_true",
-                    help="SpC-Retrain: group-l1 on the BCSR grid, compress "
-                         "without pruning, debias the compressed model, and "
-                         "write a compressed checkpoint")
+                    help="SpC-Retrain into BlockCSR: prox-SpC training with "
+                         "plan-aligned block group-l1 (exact zero blocks on "
+                         "the serving (out, in) BCSR grid, no prune step), "
+                         "then mask-frozen debias retraining ON the "
+                         "compressed params (only BlockCSR.data updates, dw "
+                         "via SDDMM at resident slots), then a compressed "
+                         "checkpoint under <ckpt-dir>/compressed that "
+                         "launch/serve --sparse --ckpt-dir loads "
+                         "template-free")
+    ap.add_argument("--quantize-bits", type=int, default=0, choices=[0, 4, 8],
+                    help="Deep Compression stage 2 (with --sparse): after "
+                         "debias, k-means palette-quantize BlockCSR block "
+                         "data to PaletteBCSR at this bit width (0 = off); "
+                         "the checkpoint then serves from the quantized "
+                         "form directly")
     ap.add_argument("--block", type=int, nargs=2, default=(8, 64),
                     metavar=("BR", "BC"),
                     help="BCSR block on the (out, in) view (--sparse)")
     ap.add_argument("--min-block-sparsity", type=float, default=0.3,
                     help="dense fallback below this zero-block fraction")
     args = ap.parse_args(argv)
+    if args.quantize_bits and not args.sparse:
+        raise SystemExit("--quantize-bits requires --sparse (the palette "
+                         "quantizes the compressed BlockCSR block store)")
 
     logging.basicConfig(level=logging.INFO)
     cfg = get_config(args.arch)
@@ -149,19 +170,26 @@ def main(argv=None):
                 params, make_step, opt, opt_debias, batch_fn,
                 spc_steps=args.steps, debias_steps=args.debias_steps,
                 plan=plan, checkpointer=ckpt, log_every=args.log_every)
+            if args.quantize_bits:
+                # Deep Compression stage 2, the LAST stage: quantize after
+                # debias so retraining saw fp block data; the checkpoint
+                # below stores (and serve loads) the palette form directly
+                cp = quantize_compressed(cp, bits=args.quantize_bits)
+                report["palette_bytes"] = compressed_size_bytes(cp)
             print("compression:", json.dumps(report, indent=1))
             if hist_spc:
                 print(f"loss: {hist_spc[0]['loss']:.4f} -> "
                       f"{hist_spc[-1]['loss']:.4f}")
             print(compression_summary(cp))
             print(format_size_report(report["dense_bytes"],
-                                     report["bcsr_bytes"]))
+                                     report["bcsr_bytes"],
+                                     report.get("palette_bytes")))
             if args.ckpt_dir:
                 cdir = os.path.join(args.ckpt_dir, "compressed")
                 final_step = args.steps + args.debias_steps
                 path = Checkpointer(cdir, keep_n=2).save(
                     final_step, cp,
-                    extra={"plan": dataclasses.asdict(plan),
+                    extra={"plan": dataclasses.asdict(cp.plan),
                            "arch": args.arch, "reduced": args.reduced})
                 print(f"compressed checkpoint: {path}")
             return cp, hist_spc, hist_db, report

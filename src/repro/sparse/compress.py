@@ -23,6 +23,12 @@ slice is compressed separately, padded to a uniform slot count
 ``lax.scan`` exactly like the dense one. Matrices that don't compress (too
 small, too dense, or BCSR bytes >= dense bytes) stay dense in the residue —
 the ``CompressionPlan`` dense fallback.
+
+When the plan sets ``quantize_bits`` (8 or 4, with per-layer overrides),
+the emitted leaves are ``PaletteBCSR``: block data k-means-clustered to a
+per-layer palette and stored as uint8 codes (Deep Compression stage 2) —
+``quantize_compressed`` is also callable standalone as the last pipeline
+stage, after debias retraining.
 """
 from __future__ import annotations
 
@@ -36,7 +42,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import prox as prox_lib
-from repro.sparse.formats import BlockCSR, bcsr_to_dense, dense_to_bcsr, pad_bcsr
+from repro.core import quantize as quantize_lib
+from repro.sparse.formats import (BlockCSR, PaletteBCSR, dense_to_bcsr,
+                                  pack_uint4, pad_bcsr)
 
 PyTree = Any
 
@@ -56,17 +64,32 @@ class CompressionPlan:
     min_size:     matrices with fewer elements stay dense.
     overrides:    ((path_substring, (br, bc)), ...) per-layer block sizes;
                   first match wins.
+    quantize_bits: None keeps fp BlockCSR; 8 or 4 palette-quantizes the
+                  block data (Deep Compression stage 2 — k-means palette,
+                  code 0 reserved for exact zero) so ``compress_params``
+                  emits ``PaletteBCSR`` leaves the runtime serves directly.
+    quantize_overrides: ((path_substring, bits), ...) per-layer bit widths;
+                  first match wins, bits 0 keeps that layer fp.
     """
     block: tuple[int, int] = (8, 128)
     min_sparsity: float = 0.5
     min_size: int = 4096
     overrides: tuple = ()
+    quantize_bits: Optional[int] = None
+    quantize_overrides: tuple = ()
 
     def block_for(self, path: str) -> tuple[int, int]:
         for sub, blk in self.overrides:
             if sub in path:
                 return tuple(blk)
         return self.block
+
+    def bits_for(self, path: str) -> Optional[int]:
+        """Palette bit width for a layer path (None = keep fp BlockCSR)."""
+        for sub, bits in self.quantize_overrides:
+            if sub in path:
+                return int(bits) or None
+        return self.quantize_bits
 
 
 @partial(jax.tree_util.register_dataclass,
@@ -87,7 +110,7 @@ class CompressedParams:
 
 
 def _is_bcsr(x) -> bool:
-    return isinstance(x, BlockCSR)
+    return isinstance(x, (BlockCSR, PaletteBCSR))
 
 
 # ---------------------------------------------------------------------------
@@ -267,7 +290,98 @@ def compress_params(params: PyTree,
         if m is not None:
             sparse["head"] = m
             dense["head"] = _placeholder(np.asarray(dense["head"]), False)
-    return CompressedParams(dense=dense, sparse=sparse, plan=plan)
+    cp = CompressedParams(dense=dense, sparse=sparse, plan=plan)
+    if plan.quantize_bits or plan.quantize_overrides:
+        cp = quantize_compressed(cp)            # emit PaletteBCSR leaves
+    return cp
+
+
+# ---------------------------------------------------------------------------
+# Palette quantization (Deep Compression stage 2: BlockCSR -> PaletteBCSR)
+# ---------------------------------------------------------------------------
+
+def quantize_bcsr(m: BlockCSR, bits: int, iters: int = 25) -> PaletteBCSR:
+    """k-means palette-quantize a BlockCSR's block store (host-side).
+
+    Per layer slice (stacked stores quantize each ``n_super`` slice with its
+    own palette): cluster the NONZERO block entries to 2**bits - 1 values
+    via ``core.quantize.kmeans_palette`` and reserve code 0 for exact zero —
+    intra-block zeros, the pad slot 0, and ``pad_bcsr`` padding slots all
+    map to code 0 and reproduce bit-exactly, so the sparsity pattern (and
+    every index/gather table, shared by reference) is invariant. At 4 bits
+    codes are nibble-packed two-per-byte.
+    """
+    if bits not in (4, 8):
+        raise ValueError(f"palette bits must be 4 or 8, got {bits}")
+    br, bc = m.block
+    if bits == 4 and bc % 2:
+        raise ValueError(f"bits=4 nibble packing needs even bc, got {m.block}")
+    data = np.asarray(jax.device_get(m.data))
+    stacked = data.ndim == 4
+    slices = data if stacked else data[None]
+    n_levels = (1 << bits) - 1                  # code 0 is reserved for 0.0
+    codes_l, pal_l = [], []
+    for sl in slices:
+        palette, _, assign = quantize_lib.kmeans_palette(
+            jnp.asarray(sl), n_levels, iters=iters)
+        codes = np.where(sl.reshape(-1) != 0,
+                         np.asarray(assign).astype(np.int64) + 1,
+                         0).astype(np.uint8).reshape(sl.shape)
+        pal = np.zeros((1 << bits,), np.float32)
+        pal[1:] = np.asarray(palette)
+        codes_l.append(codes)
+        pal_l.append(pal)
+    codes = np.stack(codes_l) if stacked else codes_l[0]
+    pal = np.stack(pal_l) if stacked else pal_l[0]
+    codes = jnp.asarray(codes)
+    if bits == 4:
+        codes = pack_uint4(codes)
+    return PaletteBCSR(
+        codes=codes, palette=jnp.asarray(pal),
+        col_idx=m.col_idx, row_ptr=m.row_ptr,
+        gather_idx=m.gather_idx, gather_blk=m.gather_blk,
+        gather_nnz=m.gather_nnz,
+        gather_t_idx=m.gather_t_idx, gather_t_blk=m.gather_t_blk,
+        gather_t_nnz=m.gather_t_nnz,
+        shape=m.shape, block=m.block, n_blocks=m.n_blocks, bits=bits)
+
+
+def quantize_compressed(cp: CompressedParams,
+                        bits: Optional[int] = None) -> CompressedParams:
+    """Quantize every BlockCSR leaf of a ``CompressedParams`` to
+    ``PaletteBCSR`` per the plan's ``bits_for`` (or a blanket ``bits``
+    argument, which also updates the stored plan). The LAST pipeline stage:
+    run after debias retraining — the quantized form is serving-only.
+    Already-quantized leaves pass through unchanged."""
+    plan = cp.plan
+    if bits is not None:
+        plan = dataclasses.replace(plan, quantize_bits=bits)
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cp.sparse,
+                                                         is_leaf=_is_bcsr)
+    leaves = []
+    for path, leaf in flat:
+        b = plan.bits_for(_path_str(path)) if isinstance(leaf, BlockCSR) \
+            else None
+        leaves.append(quantize_bcsr(leaf, b) if b else leaf)
+    return CompressedParams(dense=cp.dense,
+                            sparse=jax.tree_util.tree_unflatten(treedef,
+                                                                leaves),
+                            plan=plan)
+
+
+def dequantize_compressed(cp: CompressedParams) -> CompressedParams:
+    """Inverse runtime conversion: expand every PaletteBCSR back to an fp
+    BlockCSR (values are the palette entries — lossy vs the pre-quantization
+    weights, lossless vs the quantized model). Use to resume mask-frozen
+    retraining from a quantized checkpoint."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cp.sparse,
+                                                         is_leaf=_is_bcsr)
+    leaves = [leaf.dequantize() if isinstance(leaf, PaletteBCSR) else leaf
+              for _, leaf in flat]
+    return CompressedParams(dense=cp.dense,
+                            sparse=jax.tree_util.tree_unflatten(treedef,
+                                                                leaves),
+                            plan=cp.plan)
 
 
 # ---------------------------------------------------------------------------
@@ -363,6 +477,12 @@ def split_trainable(cp: CompressedParams):
     """
     flat, treedef = jax.tree_util.tree_flatten_with_path(cp.sparse,
                                                          is_leaf=_is_bcsr)
+    for path, leaf in flat:
+        if isinstance(leaf, PaletteBCSR):
+            raise TypeError(
+                f"split_trainable got a PaletteBCSR at {_path_str(path)}: "
+                "quantized weights are serving-only — debias before "
+                "quantize_compressed(), or dequantize_compressed() first")
     data = {_path_str(path): leaf.data for path, leaf in flat}
     trainable = {"dense": cp.dense, "bcsr_data": data}
     plan = cp.plan
@@ -398,9 +518,9 @@ def densify_compressed(cp: CompressedParams, like: PyTree) -> PyTree:
 
     out = jax.tree.map(merge, like, cp.dense)
 
-    def to_stored(m: BlockCSR, path: str, orig_shape, idx=None):
+    def to_stored(m, path: str, orig_shape, idx=None):
         sl = m if idx is None else jax.tree.map(lambda a: a[idx], m)
-        mat = np.asarray(bcsr_to_dense(sl))[:m.shape[0], :m.shape[1]]
+        mat = np.asarray(sl.to_dense())[:m.shape[0], :m.shape[1]]
         return _from_out_in(path, mat, orig_shape)
 
     for name, m in iter_bcsr(cp):
@@ -439,23 +559,57 @@ def compressed_size_bytes(cp: CompressedParams) -> int:
     return int(total)
 
 
-def format_size_report(dense_bytes: int, bcsr_bytes: int) -> str:
-    """One-line dense-vs-BCSR byte report (shared by serve/train CLIs)."""
-    return (f"model size dense={dense_bytes/2**20:.2f}MB "
+def bcsr_equiv_size_bytes(cp: CompressedParams) -> int:
+    """What ``compressed_size_bytes`` would report with every palette leaf
+    expanded back to fp32 BlockCSR — the stage-1 baseline the quantized
+    total is compared against (docs/size_accounting.md)."""
+    total = sum(leaf.size * leaf.dtype.itemsize
+                for leaf in jax.tree.leaves(cp.dense))
+    for _, m in iter_bcsr(cp):
+        total += m.bcsr_equiv_nbytes if isinstance(m, PaletteBCSR) \
+            else m.nbytes
+    return int(total)
+
+
+def format_size_report(dense_bytes: int, bcsr_bytes: int,
+                       palette_bytes: Optional[int] = None) -> str:
+    """One-line dense-vs-compressed byte report (shared by serve/train CLIs).
+
+    ``bcsr_bytes`` is the fp BlockCSR total; pass ``palette_bytes`` after
+    quantization to also report the stage-2 (palette) total and ratio.
+    See docs/size_accounting.md for how each term is computed."""
+    line = (f"model size dense={dense_bytes/2**20:.2f}MB "
             f"bcsr={bcsr_bytes/2**20:.2f}MB "
             f"({dense_bytes/max(bcsr_bytes, 1):.1f}x)")
+    if palette_bytes is not None:
+        line += (f" palette={palette_bytes/2**20:.2f}MB "
+                 f"({dense_bytes/max(palette_bytes, 1):.1f}x)")
+    return line
 
 
 def compression_summary(cp: CompressedParams) -> str:
-    """Per-matrix table of block occupancy and byte ratios."""
+    """Per-layer breakdown: format, block occupancy and actual stored bytes
+    per compressed matrix, plus a dense-residue / total footer. This is the
+    table ``launch/serve --sparse`` prints; docs/size_accounting.md documents
+    every column."""
     lines = [f"{'weight':44s} {'(out, in)':>14s} {'block':>10s} "
-             f"{'blocks':>14s} {'bytes':>10s}"]
+             f"{'fmt':>6s} {'blocks':>14s} {'bytes':>10s}"]
+    sparse_total = 0
     for name, m in iter_bcsr(cp):
         grid = int(np.prod(m.block_grid))
-        stack = m.data.ndim == 4
-        n = m.data.shape[0] if stack else 1
+        store = m.codes if isinstance(m, PaletteBCSR) else m.data
+        stack = store.ndim == 4
+        n = store.shape[0] if stack else 1
+        fmt = f"pal{m.bits}" if isinstance(m, PaletteBCSR) else "bcsr"
+        sparse_total += m.nbytes
         lines.append(
             f"{name:44s} {str(m.shape):>14s} {str(m.block):>10s} "
-            f"{m.n_blocks:>6d}/{grid:<7d} {m.nbytes:>10d}"
+            f"{fmt:>6s} {m.n_blocks:>6d}/{grid:<7d} {m.nbytes:>10d}"
             + (f"  x{n} layers" if stack else ""))
+    dense_residue = sum(int(l.size) * l.dtype.itemsize
+                        for l in jax.tree.leaves(cp.dense))
+    lines.append(f"{'dense residue (embeddings/norms/fallback)':92s} "
+                 f"{dense_residue:>10d}")
+    lines.append(f"{'total serving bytes':92s} "
+                 f"{sparse_total + dense_residue:>10d}")
     return "\n".join(lines)

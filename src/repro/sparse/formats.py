@@ -13,6 +13,15 @@ index sort).
 
 A plain elementwise CSR is retained (``CSR``) as the paper-fidelity format
 for size accounting and the embedded/serial reference path.
+
+**PaletteBCSR** is the Deep-Compression stage-2 serving format (Han et al.
+2016, the paper's cited follow-up): the BCSR block store holds uint8 palette
+*codes* (packed two-per-byte at 4 bits) plus a per-layer fp32 palette of
+2**bits values; code 0 is reserved for exact zero so intra-block sparsity
+survives quantization bit-exactly. Index/gather tables are shared with
+BlockCSR, so a PaletteBCSR drops into every consumer of the gather tables
+(the Pallas kernel dequantizes resident blocks on the fly — palette lookup
+fused into the gather-block-matmul).
 """
 from __future__ import annotations
 
@@ -190,6 +199,125 @@ def pad_bcsr(m: BlockCSR, n_slots: int, jmax: int, jmax_t: int) -> BlockCSR:
         gather_t_blk=pad0(m.gather_t_blk, ((0, 0), (0, jmax_t - cur_jt))),
         gather_t_nnz=m.gather_t_nnz,
         shape=m.shape, block=m.block, n_blocks=n_slots - 1)
+
+
+# ---------------------------------------------------------------------------
+# PaletteBCSR — quantized block store (Deep Compression stage 2)
+# ---------------------------------------------------------------------------
+
+def pack_uint4(codes):
+    """Pack uint8 codes < 16 two-per-byte along the last axis (must be even).
+
+    Convention: byte k holds codes[2k] in the low nibble and codes[2k+1] in
+    the high nibble, so ``unpack_uint4(pack_uint4(c)) == c``.
+    """
+    assert codes.shape[-1] % 2 == 0, codes.shape
+    c = jnp.asarray(codes, jnp.uint8)
+    return (c[..., 0::2] | (c[..., 1::2] << 4)).astype(jnp.uint8)
+
+
+def unpack_uint4(packed):
+    """Inverse of ``pack_uint4``: (..., n) uint8 -> (..., 2n) uint8 codes."""
+    p = jnp.asarray(packed, jnp.uint8)
+    lo = p & 0xF
+    hi = p >> 4
+    return jnp.stack([lo, hi], axis=-1).reshape(*p.shape[:-1],
+                                                p.shape[-1] * 2)
+
+
+def dequantize_codes(codes, palette, bits: int):
+    """Palette lookup: codes (uint8, possibly nibble-packed) -> fp blocks.
+
+    ``palette`` is (P,) for a single matrix or (L, P) for a stacked layer
+    store (then ``codes`` carries the matching leading L axis). jit-safe.
+    """
+    if bits == 4:
+        codes = unpack_uint4(codes)
+
+    def take(c, p):
+        return jnp.take(p, c.astype(jnp.int32))
+
+    if palette.ndim == 2:                       # stacked over n_super
+        return jax.vmap(take)(codes, palette)
+    return take(codes, palette)
+
+
+@partial(jax.tree_util.register_dataclass,
+         data_fields=["codes", "palette", "col_idx", "row_ptr",
+                      "gather_idx", "gather_blk", "gather_nnz",
+                      "gather_t_idx", "gather_t_blk", "gather_t_nnz"],
+         meta_fields=["shape", "block", "n_blocks", "bits"])
+@dataclasses.dataclass(frozen=True)
+class PaletteBCSR:
+    """Palette-quantized BlockCSR: same index/gather structure as
+    ``BlockCSR``, block data stored as palette codes.
+
+    codes:   (n_slots, br, bc) uint8 at bits=8, (n_slots, br, bc//2) uint8
+             with two nibble codes per byte at bits=4. Slot 0 stays the
+             all-zero pad block (all codes 0).
+    palette: (2**bits,) fp32 values; palette[0] == 0.0 exactly, so code 0
+             reproduces intra-block zeros bit-exactly and the sparsity
+             pattern is invariant under quantization.
+    bits:    4 or 8 (static metadata — selects the kernel unpack path).
+
+    Stacked layer stores carry a leading ``n_super`` axis on every array
+    field (codes (L, n_slots, br, bc'), palette (L, 2**bits), ...), exactly
+    like a stacked ``BlockCSR``, so the quantized stack rides through the
+    layer ``lax.scan`` unchanged.
+    """
+    codes: Array
+    palette: Array
+    col_idx: Array
+    row_ptr: Array
+    gather_idx: Array
+    gather_blk: Array
+    gather_nnz: Array
+    gather_t_idx: Array
+    gather_t_blk: Array
+    gather_t_nnz: Array
+    shape: tuple[int, int]
+    block: tuple[int, int]
+    n_blocks: int
+    bits: int
+
+    @property
+    def block_grid(self) -> tuple[int, int]:
+        br, bc = self.block
+        return (-(-self.shape[0] // br), -(-self.shape[1] // bc))
+
+    @property
+    def nnz(self) -> int:
+        return self.n_blocks * self.block[0] * self.block[1]
+
+    @property
+    def nbytes(self) -> int:
+        """Actual serving bytes: packed codes + palette + block indices.
+        (codes are already nibble-packed at bits=4, so .size counts bytes)."""
+        return sum(int(x.size) * x.dtype.itemsize
+                   for x in (self.codes, self.palette,
+                             self.col_idx, self.row_ptr))
+
+    @property
+    def bcsr_equiv_nbytes(self) -> int:
+        """Bytes the same blocks would take as an unquantized fp32 BlockCSR
+        (the denominator of the stage-2 compression ratio)."""
+        n_entries = int(self.codes.size) * (2 if self.bits == 4 else 1)
+        return n_entries * 4 + int(self.col_idx.size) * 4 \
+            + int(self.row_ptr.size) * 4
+
+    def dequantize(self) -> BlockCSR:
+        """Expand to an fp BlockCSR with identical index/gather tables."""
+        return BlockCSR(
+            data=dequantize_codes(self.codes, self.palette, self.bits),
+            col_idx=self.col_idx, row_ptr=self.row_ptr,
+            gather_idx=self.gather_idx, gather_blk=self.gather_blk,
+            gather_nnz=self.gather_nnz,
+            gather_t_idx=self.gather_t_idx, gather_t_blk=self.gather_t_blk,
+            gather_t_nnz=self.gather_t_nnz,
+            shape=self.shape, block=self.block, n_blocks=self.n_blocks)
+
+    def to_dense(self) -> Array:
+        return bcsr_to_dense(self.dequantize())
 
 
 # ---------------------------------------------------------------------------

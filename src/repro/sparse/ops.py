@@ -19,6 +19,11 @@ same kernel — ``resolve_backend`` is the single point of truth):
                 spmm densifies the *weight*, but the weight *gradient* is
                 never materialized dense on any backend,
   'auto'      — pallas on TPU, ref elsewhere.
+
+``sparse_matmul`` also accepts a ``PaletteBCSR`` (palette-quantized block
+store, Deep Compression stage 2): the forward dequantizes resident blocks on
+the fly — in-kernel on the pallas backend, dequantize-then-matmul on ref.
+Serving-only: no weight gradient is defined for the quantized form.
 """
 from __future__ import annotations
 
@@ -31,7 +36,7 @@ import numpy as np
 
 from repro.kernels.bsr_sddmm import ops as sddmm_kops
 from repro.kernels.bsr_spmm import ops as kops
-from repro.sparse.formats import BlockCSR
+from repro.sparse.formats import BlockCSR, PaletteBCSR
 
 
 def _on_tpu() -> bool:
@@ -86,31 +91,64 @@ def _sparse_matmul_bwd(backend, res, dy):
     # with w.data. The kernel runs in interpret mode off-TPU; there is no
     # dense (out, in) intermediate on any backend.
     dw_data = sddmm_kops.bsr_weight_grad(x, dy, w).astype(w.data.dtype)
-    dw = BlockCSR(
-        data=dw_data,
-        col_idx=_zero_cotangent(w.col_idx),
-        row_ptr=_zero_cotangent(w.row_ptr),
-        gather_idx=_zero_cotangent(w.gather_idx),
-        gather_blk=_zero_cotangent(w.gather_blk),
-        gather_nnz=_zero_cotangent(w.gather_nnz),
-        gather_t_idx=_zero_cotangent(w.gather_t_idx),
-        gather_t_blk=_zero_cotangent(w.gather_t_blk),
-        gather_t_nnz=_zero_cotangent(w.gather_t_nnz),
-        shape=w.shape, block=w.block, n_blocks=w.n_blocks)
+    # zero cotangents for every side array (float0 for int indices), real
+    # gradient only at the block data — tree.map keeps the field list in
+    # one place (the dataclass registration)
+    dw = dataclasses.replace(jax.tree.map(_zero_cotangent, w), data=dw_data)
     return dx, dw
 
 
 _sparse_matmul.defvjp(_sparse_matmul_fwd, _sparse_matmul_bwd)
 
 
-def sparse_matmul(x, w: BlockCSR, backend: str = "auto"):
-    """y = x @ w.T for BlockCSR w (paper forward dense x compressed').
+def _palette_fwd_product(x, w: PaletteBCSR, backend: str):
+    if backend == "pallas":
+        return kops.spmm_palette(x, w)
+    return kops.spmm_palette_fwd_ref(x, w).astype(x.dtype)
 
-    Differentiable in x (dense x compressed backward) AND in w.data (SDDMM
-    masked weight gradient) — the compressed-retraining path."""
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _palette_matmul(backend: str, x, w: PaletteBCSR):
+    return _palette_fwd_product(x, w, backend)
+
+
+def _palette_matmul_fwd(backend, x, w):
+    return _palette_fwd_product(x, w, backend), (x, w)
+
+
+def _palette_matmul_bwd(backend, res, dy):
+    x, w = res
+    # dx through the dequantized weight — defined on BOTH backends so CPU
+    # tests and TPU serving agree (the raw pallas_call has no VJP). The
+    # quantized weight itself is a serving-time constant: codes/indices are
+    # ints and the palette deliberately gets a zero cotangent — retraining
+    # must go through dequantize_compressed().
+    dx = _bwd_dx_product(dy, w.dequantize(), backend).astype(x.dtype)
+    return dx, jax.tree.map(_zero_cotangent, w)
+
+
+_palette_matmul.defvjp(_palette_matmul_fwd, _palette_matmul_bwd)
+
+
+def sparse_matmul(x, w, backend: str = "auto"):
+    """y = x @ w.T for compressed w (paper forward dense x compressed').
+
+    ``w`` is a ``BlockCSR`` or a ``PaletteBCSR`` (Deep Compression stage 2;
+    palette lookup fused into the kernel). The BlockCSR path is
+    differentiable in x (dense x compressed backward) AND in w.data (SDDMM
+    masked weight gradient) — the compressed-retraining path. PaletteBCSR is
+    a *serving-only* weight format: differentiable in x on both backends
+    (dx through the dequantized weight), but w is treated as a constant —
+    quantize after debias (``sparse.compress.quantize_compressed``), or
+    ``dequantize_compressed`` to resume retraining."""
+    if isinstance(w, PaletteBCSR):
+        return _palette_matmul(resolve_backend(backend), x, w)
     return _sparse_matmul(resolve_backend(backend), x, w)
 
 
-def sparse_matmul_t(dy, w: BlockCSR, backend: str = "auto"):
-    """dx = dy @ w (paper backward dense x compressed)."""
+def sparse_matmul_t(dy, w, backend: str = "auto"):
+    """dx = dy @ w (paper backward dense x compressed). A ``PaletteBCSR``
+    is dequantized first (same product the palette VJP's dx path uses)."""
+    if isinstance(w, PaletteBCSR):
+        w = w.dequantize()
     return _bwd_dx_product(dy, w, resolve_backend(backend))

@@ -1,0 +1,62 @@
+"""Docs stay runnable: every ```python snippet in README.md and docs/*.md
+executes, and every intra-repo markdown link resolves.
+
+This is the docs CI job (see .github/workflows/ci.yml); it also runs in
+tier-1 so a doc-breaking refactor fails locally. Snippets must be
+self-contained and fast — they are exec'd in-process with a fresh globals
+dict (``pyproject.toml`` already puts ``src`` on the path).
+"""
+from __future__ import annotations
+
+import pathlib
+import re
+
+import pytest
+
+REPO = pathlib.Path(__file__).resolve().parents[1]
+DOCS = sorted([REPO / "README.md", *(REPO / "docs").glob("*.md")])
+
+_FENCE = re.compile(r"```python\n(.*?)```", re.S)
+# [text](target) — ignore images' inner brackets by matching lazily
+_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+
+
+def _snippets():
+    out = []
+    for doc in DOCS:
+        for i, block in enumerate(_FENCE.findall(doc.read_text())):
+            out.append(pytest.param(doc, block,
+                                    id=f"{doc.name}-snippet{i}"))
+    return out
+
+
+def _links():
+    out = []
+    for doc in DOCS:
+        for i, target in enumerate(_LINK.findall(doc.read_text())):
+            out.append(pytest.param(doc, target, id=f"{doc.name}-link{i}"))
+    return out
+
+
+def test_docs_exist():
+    assert (REPO / "README.md").exists()
+    assert (REPO / "docs" / "architecture.md").exists()
+    assert (REPO / "docs" / "size_accounting.md").exists()
+    assert len(DOCS) >= 3
+
+
+@pytest.mark.parametrize("doc,src", _snippets())
+def test_python_snippet_runs(doc, src):
+    exec(compile(src, f"<{doc.name} snippet>", "exec"),  # noqa: S102
+         {"__name__": f"doc_snippet_{doc.stem}"})
+
+
+@pytest.mark.parametrize("doc,target", _links())
+def test_intra_repo_link_resolves(doc, target):
+    if target.startswith(("http://", "https://", "mailto:")):
+        pytest.skip("external link")
+    path = target.split("#", 1)[0]
+    if not path:
+        pytest.skip("pure anchor")
+    resolved = (doc.parent / path).resolve()
+    assert resolved.exists(), f"{doc.name} links to missing {target}"

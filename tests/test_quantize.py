@@ -53,6 +53,34 @@ def test_quantized_size_much_smaller():
     assert dense / dc > 10
 
 
+def test_kmeans_all_zero_layer():
+    """A fully pruned layer must not produce NaNs (min/max over an empty
+    nonzero set): zero palette, weights unchanged, all assignments 0."""
+    w = jnp.zeros((32, 32))
+    palette, q, assign = kmeans_palette(w, 16)
+    assert np.all(np.isfinite(np.asarray(palette)))
+    np.testing.assert_array_equal(np.asarray(palette), np.zeros(16))
+    np.testing.assert_array_equal(np.asarray(q), np.zeros((32, 32)))
+    np.testing.assert_array_equal(np.asarray(assign), np.zeros(32 * 32))
+
+
+def test_kmeans_fewer_nonzeros_than_clusters():
+    """With fewer distinct nonzeros than clusters the occupied clusters land
+    exactly on the values; empty clusters keep their init and go unused."""
+    w = np.zeros((16, 16), np.float32)
+    w[0, :5] = [-1.0, -0.5, 0.25, 0.75, 1.0]
+    palette, q, assign = kmeans_palette(jnp.asarray(w), 64)
+    np.testing.assert_allclose(np.asarray(q), w, atol=1e-6)
+    assert np.all(np.isfinite(np.asarray(palette)))
+
+
+def test_kmeans_single_distinct_value():
+    w = np.zeros((8, 8), np.float32)
+    w[::2] = 0.5
+    palette, q, assign = kmeans_palette(jnp.asarray(w), 16)
+    np.testing.assert_allclose(np.asarray(q), w, atol=1e-6)
+
+
 def test_huffman_entropy_bound():
     assign = np.asarray([0] * 90 + [1] * 10)
     nz = np.ones(100, bool)
