@@ -1,0 +1,98 @@
+"""Tier-2 bench regression gate: compressed-decode tokens/s vs baseline.
+
+CI runs ``benchmarks.inference_speedup --json BENCH_pr.json`` on every run,
+uploads the JSON as an artifact, and then runs this script: the build FAILS
+if the whole-model compressed (BCSR) decode throughput regressed more than
+``--max-regress`` (default 20%) against the committed
+``benchmarks/BENCH_baseline.json``.
+
+Absolute tokens/s are machine-dependent (the committed baseline was not
+necessarily produced on the same runner class), so the default gate is
+**machine-corrected**: it compares the compressed-decode throughput
+normalized by the *same run's* dense-decode throughput
+(``bcsr_tok_s / dense_tok_s``) against the baseline's normalized value. A
+slower/noisier runner slows dense and compressed alike and cancels out; a
+real compressed-path regression (kernel dispatch, extra copies, a lost
+fusion) shows up as the ratio dropping. Pass ``--absolute`` to gate on raw
+tokens/s instead — only meaningful when baseline and run share a machine
+class. After a legitimate perf change, regenerate the baseline:
+
+    PYTHONPATH=src python -m benchmarks.inference_speedup --steps 60 \
+        --json /tmp/BENCH_pr.json
+    python -m benchmarks.check_regression /tmp/BENCH_pr.json --update
+
+and commit the result.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import re
+import shutil
+import sys
+
+BASELINE = "benchmarks/BENCH_baseline.json"
+DECODE_ROW = "inference_speedup/decode_dense_vs_compressed"
+
+
+def _field(derived: str, name: str) -> float:
+    m = re.search(rf"{name}=([0-9.]+)", derived)
+    if not m:
+        raise SystemExit(f"no {name} in {derived!r}")
+    return float(m.group(1))
+
+
+def decode_stats(report: dict) -> tuple[float, float]:
+    """(bcsr_tok_s, dense_tok_s) from a bench JSON report."""
+    for row in report["rows"]:
+        if row["name"] == DECODE_ROW:
+            return (_field(row["derived"], "bcsr_tok_s"),
+                    _field(row["derived"], "dense_tok_s"))
+    raise SystemExit(f"row {DECODE_ROW!r} missing from report")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("report", help="BENCH_pr.json from inference_speedup "
+                                   "--json")
+    ap.add_argument("--baseline", default=BASELINE)
+    ap.add_argument("--max-regress", type=float, default=0.20,
+                    help="fail if compressed-decode throughput drops more "
+                         "than this fraction below the baseline")
+    ap.add_argument("--absolute", action="store_true",
+                    help="gate on raw tokens/s instead of the machine-"
+                         "corrected (bcsr/dense) ratio — requires baseline "
+                         "and run to share a machine class")
+    ap.add_argument("--update", action="store_true",
+                    help="copy the report over the baseline instead of "
+                         "gating (commit the result)")
+    args = ap.parse_args(argv)
+
+    if args.update:
+        shutil.copy(args.report, args.baseline)
+        print(f"baseline updated: {args.baseline}")
+        return 0
+
+    with open(args.report) as f:
+        pr_bcsr, pr_dense = decode_stats(json.load(f))
+    with open(args.baseline) as f:
+        base_bcsr, base_dense = decode_stats(json.load(f))
+
+    if args.absolute:
+        metric, base_metric, unit = pr_bcsr, base_bcsr, "tok/s"
+    else:
+        metric = pr_bcsr / max(pr_dense, 1e-9)
+        base_metric = base_bcsr / max(base_dense, 1e-9)
+        unit = "x dense"
+    floor = base_metric * (1.0 - args.max_regress)
+    verdict = "OK" if metric >= floor else "REGRESSION"
+    print(f"compressed decode: {pr_bcsr:.1f} tok/s "
+          f"({pr_bcsr / max(pr_dense, 1e-9):.3f}x dense) vs baseline "
+          f"{base_bcsr:.1f} ({base_bcsr / max(base_dense, 1e-9):.3f}x) — "
+          f"gated metric {metric:.3f} {unit}, floor {floor:.3f} "
+          f"-> {verdict}")
+    return 0 if metric >= floor else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -175,10 +175,22 @@ def decode_compressed_row(gen_steps: int = 8):
 
 if __name__ == "__main__":
     import argparse
+    import json
 
     ap = argparse.ArgumentParser()
     ap.add_argument("--steps", type=int, default=STEPS,
                     help="SpC training steps (CI tier-2 uses a short run)")
+    ap.add_argument("--json", default="",
+                    help="also write the result rows to this JSON path — "
+                         "CI uploads it as the BENCH_pr.json artifact and "
+                         "benchmarks/check_regression.py gates the "
+                         "compressed-decode tokens/s against the committed "
+                         "benchmarks/BENCH_baseline.json")
     args = ap.parse_args()
-    for r in run(steps=args.steps):
+    rows = run(steps=args.steps)
+    for r in rows:
         print(r)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"steps": args.steps, "rows": rows}, f, indent=1)
+        print(f"wrote {args.json}")

@@ -202,7 +202,7 @@ class Checkpointer:
                                "manifest.json")) as f:
             return json.load(f)
 
-    def restore_compressed(self, step: Optional[int] = None):
+    def restore_compressed(self, step: Optional[int] = None, mesh=None):
         """Template-free restore of a ``CompressedParams`` checkpoint.
 
         The manifest's leaf names ("dense/..." / "sparse/...") carry the
@@ -211,6 +211,12 @@ class Checkpointer:
         by ``launch/train --sparse`` without re-deriving a template from the
         architecture (the sparsity pattern lives in the checkpoint, not the
         code). BlockCSR leaves rebuild without densifying.
+
+        ``mesh``: optional ``jax.sharding.Mesh`` — the restored tree is
+        device_put with ``distributed.sharding.param_shardings`` (block
+        stores row-sharded along the slot axis, index/gather tables and
+        palettes replicated). Elastic like the dense restore path: the
+        checkpoint stores host arrays, so any mesh shape works.
         """
         from repro.sparse.compress import CompressedParams, CompressionPlan
 
@@ -261,8 +267,12 @@ class Checkpointer:
                 quantize_overrides=tuple(
                     (s, int(b))
                     for s, b in spec.get("quantize_overrides", ())))
-        return CompressedParams(dense=roots["dense"], sparse=roots["sparse"],
-                                plan=plan)
+        cp = CompressedParams(dense=roots["dense"], sparse=roots["sparse"],
+                              plan=plan)
+        if mesh is not None:
+            from repro.distributed.sharding import param_shardings
+            cp = jax.device_put(cp, param_shardings(cp, mesh))
+        return cp
 
 
 def _bcsr_restore(npz, name, entry) -> BlockCSR:

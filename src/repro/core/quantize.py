@@ -47,7 +47,23 @@ def kmeans_palette(w: jax.Array, n_clusters: int, iters: int = 25,
       * fewer nonzeros (or fewer distinct values) than clusters: empty
         clusters keep their linspace init and simply go unused — the
         occupied clusters converge onto the data exactly.
+
+    Concrete inputs only: the all-zero early-out and the palette/code
+    decisions are data-dependent host control flow, so tracing this under
+    jit (e.g. calling quantize from inside a sharded jitted step) would
+    either crash on the bool() or silently bake one branch in. Sharded
+    callers quantize on the host AFTER training (``jax.device_get``
+    gathers a sharded array transparently) — that is where
+    ``sparse.compress.quantize_bcsr`` calls this. To force a host callback
+    from inside jit, wrap the caller in ``jax.pure_callback`` yourself.
     """
+    if isinstance(w, jax.core.Tracer):
+        raise TypeError(
+            "kmeans_palette is host-side (data-dependent control flow) and "
+            "cannot run under jit/vmap/scan tracing — call it on concrete "
+            "arrays outside jit (quantize AFTER the jitted step; sharded "
+            "arrays gather transparently via jax.device_get), or wrap the "
+            "caller in jax.pure_callback")
     flat = w.reshape(-1).astype(jnp.float32)
     nz_mask = flat != 0
     if not bool(jnp.any(nz_mask)):

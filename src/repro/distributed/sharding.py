@@ -18,12 +18,15 @@ Physical mesh axes: ("pod", "data", "model").
 from __future__ import annotations
 
 import contextlib
+import dataclasses
 import re
 import threading
 from typing import Any, Optional, Sequence
 
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.sparse.formats import BlockCSR, PaletteBCSR
 
 _ctx = threading.local()
 
@@ -179,13 +182,88 @@ def param_logical_axes(params) -> Any:
     return jax.tree_util.tree_unflatten(treedef, axes)
 
 
+# ---------------------------------------------------------------------------
+# Compressed (BlockCSR / PaletteBCSR) leaves
+# ---------------------------------------------------------------------------
+# A compressed projection shards like its dense counterpart's OUTPUT dim:
+# the BCSR slot axis stores nonzero blocks row-major over block rows of the
+# (out, in) view, so splitting slots across devices splits block rows —
+# the compressed analogue of sharding the dense out dimension. Everything
+# that describes the sparsity pattern (col_idx/row_ptr/gather tables) and
+# the palette is replicated: the tables are tiny, every device needs the
+# full pattern to interpret its slots, and replication keeps the scalar-
+# prefetch index maps host-local.
+#
+# Leaf-name -> logical axis of the (out, in) row dim (mapped to a physical
+# mesh axis through PARAM_RULES, with the usual divisibility fallback to
+# replication). Matched against keystr paths AND split_trainable's
+# "bcsr_data/<path>" keys, so shardings survive the SpC-Retrain debias
+# phase unchanged.
+
+_BCSR_ROW_PATTERNS: list[tuple[str, str]] = [
+    (r"\bwq\b|\bwk\b|\bwv\b",                         "heads"),
+    (r"\bewi\b|\bewg\b|\bwi\b|\bwg\b|\bcm_k\b",       "mlp"),
+    (r"\bewo\b|\bwo\b|\bcm_v\b|\brwkv_o\b|\blru_out\b", "embed"),
+    (r"\brwkv_[rkvg]\b|\bcm_r\b",                     "embed2"),
+    (r"\blru_in\b|\blru_gate\b",                      "lru"),
+    (r"\bhead\b",                                     "vocab"),
+]
+
+_BCSR_META = ("shape", "block", "n_blocks", "bits")
+
+
+def _is_bcsr(x) -> bool:
+    return isinstance(x, (BlockCSR, PaletteBCSR))
+
+
+def _bcsr_row_spec(path: str, arr, mesh: Mesh, rules: dict) -> P:
+    """Spec for a BCSR block store (lead..., n_slots, br, bc): slot axis
+    sharded by the dense out-dim rule, lead (layer/expert) axes replicated."""
+    logical = None
+    for pat, ax in _BCSR_ROW_PATTERNS:
+        if re.search(pat, path):
+            logical = ax
+            break
+    axes: list = [None] * arr.ndim
+    slot_axis = arr.ndim - 3
+    if slot_axis >= 0:
+        axes[slot_axis] = logical
+    return _axes_to_spec(axes, arr.shape, mesh, rules)
+
+
+def _bcsr_leaf_shardings(path: str, leaf, mesh: Mesh, rules: dict):
+    """Mirror a BlockCSR/PaletteBCSR with NamedShardings per array field:
+    data/codes row-sharded, indices + gather tables + palette replicated."""
+    repl = NamedSharding(mesh, P())
+    fields = {f.name: repl for f in dataclasses.fields(leaf)
+              if f.name not in _BCSR_META}
+    store = "codes" if isinstance(leaf, PaletteBCSR) else "data"
+    fields[store] = NamedSharding(
+        mesh, _bcsr_row_spec(path, getattr(leaf, store), mesh, rules))
+    return dataclasses.replace(leaf, **fields)
+
+
 def param_shardings(params, mesh: Mesh, rules: Optional[dict] = None):
-    """NamedSharding pytree for params (or any state with param-like paths)."""
+    """NamedSharding pytree for params (or any state with param-like paths).
+
+    Handles compressed pytrees (``CompressedParams`` / trees holding
+    ``BlockCSR``/``PaletteBCSR`` leaves, and ``split_trainable``'s
+    ``bcsr_data`` view): index/palette arrays replicate, block stores shard
+    along the slot (block-row) axis per the dense rule for that path."""
     rules = rules or PARAM_RULES
-    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params,
+                                                         is_leaf=_is_bcsr)
     out = []
     for path, leaf in flat:
-        axes = _leaf_axes(jax.tree_util.keystr(path), leaf)
+        ps = jax.tree_util.keystr(path)
+        if _is_bcsr(leaf):
+            out.append(_bcsr_leaf_shardings(ps, leaf, mesh, rules))
+            continue
+        if "bcsr_data" in ps:               # split_trainable's data view
+            out.append(NamedSharding(mesh,
+                                     _bcsr_row_spec(ps, leaf, mesh, rules)))
+            continue
+        axes = _leaf_axes(ps, leaf)
         spec = _axes_to_spec(axes, leaf.shape, mesh, rules)
         out.append(NamedSharding(mesh, spec))
     return jax.tree_util.tree_unflatten(treedef, out)

@@ -39,3 +39,39 @@ def make_host_mesh(data: int = 1, model: int = 1):
     n = data * model
     return jax.make_mesh((data, model), ("data", "model"),
                          devices=jax.devices()[:n], **_axis_type_kwargs(2))
+
+
+def mesh_from_flag(spec: str):
+    """Resolve a CLI ``--mesh`` flag to a Mesh (or None).
+
+    'none'   -> no mesh (single device),
+    'single' -> production (data=16, model=16) pod,
+    'multi'  -> production (pod=2, data=16, model=16),
+    'D,M'    -> host mesh (data=D, model=M) over existing devices — the
+                multi-device CI shape (XLA_FLAGS=
+                --xla_force_host_platform_device_count=N forces N host
+                devices before jax import).
+
+    All variants serve both dense and compressed params: BlockCSR /
+    PaletteBCSR leaves shard their block store along the block-row slot
+    axis and replicate index/gather/palette arrays
+    (distributed/sharding.param_shardings).
+    """
+    if spec in (None, "", "none"):
+        return None
+    if spec == "single":
+        return make_production_mesh()
+    if spec == "multi":
+        return make_production_mesh(multi_pod=True)
+    try:
+        data, model = (int(t) for t in spec.split(","))
+    except ValueError:
+        raise SystemExit(
+            f"--mesh must be none|single|multi|DATA,MODEL — got {spec!r}")
+    if len(jax.devices()) < data * model:
+        raise SystemExit(
+            f"--mesh {spec} needs {data * model} devices but only "
+            f"{len(jax.devices())} present; set XLA_FLAGS="
+            f"--xla_force_host_platform_device_count={data * model} "
+            "before launch to force host devices")
+    return make_host_mesh(data, model)

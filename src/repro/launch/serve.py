@@ -28,15 +28,19 @@ docs/size_accounting.md.
 from __future__ import annotations
 
 import argparse
+import contextlib
 import os
 import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.checkpoint.checkpointer import Checkpointer
 from repro.configs import get_config
 from repro.core.metrics import model_size_bytes
+from repro.distributed import sharding as shd
+from repro.launch.mesh import mesh_from_flag
 from repro.models.model_zoo import build
 from repro.serve.step import generate
 from repro.sparse.compress import (CompressionPlan, compress_params,
@@ -89,6 +93,22 @@ def main(argv=None):
     ap.add_argument("--ckpt-dir", default="",
                     help="serve a compressed checkpoint from launch/train "
                          "--sparse (looks in <dir>/compressed, then <dir>)")
+    ap.add_argument("--mesh", default="none",
+                    help="none | single | multi | DATA,MODEL. Serve under "
+                         "an SPMD mesh: 'single'/'multi' are the production "
+                         "pod meshes, 'D,M' a host mesh (the multi-device "
+                         "CI runs --mesh 2,2 on 4 forced host devices). "
+                         "Compressed (--sparse / --ckpt-dir) serving shards "
+                         "the BCSR/PaletteBCSR pytree: block stores split "
+                         "along the block-row slot axis per the dense "
+                         "out-dim rule, index/gather tables and palettes "
+                         "replicate, and prefill/decode run the same "
+                         "sparse_matmul kernels under GSPMD — logits match "
+                         "the unsharded run")
+    ap.add_argument("--logits-out", default="",
+                    help="save the prefill logits (B, vocab) to this .npy "
+                         "path — the CI sharded-vs-single-host parity gate "
+                         "compares these to 1e-4")
     ap.add_argument("--temperature", type=float, default=0.0)
     args = ap.parse_args(argv)
     if args.quantize_bits and (not args.sparse or args.ckpt_dir):
@@ -100,6 +120,9 @@ def main(argv=None):
     model = build(args.arch, reduced=args.reduced)
     cfg = model.cfg
     key = jax.random.PRNGKey(0)
+    mesh = mesh_from_flag(args.mesh)
+    mesh_ctx = shd.use_mesh(mesh) if mesh is not None \
+        else contextlib.nullcontext()
 
     if args.ckpt_dir:
         # --ckpt-dir always means "serve this compressed checkpoint" (with
@@ -119,7 +142,7 @@ def main(argv=None):
                 f"checkpoint was trained with arch={extra.get('arch')!r} "
                 f"reduced={extra.get('reduced')} but serve got "
                 f"arch={args.arch!r} reduced={args.reduced}")
-        params = ckpt.restore_compressed()
+        params = ckpt.restore_compressed(mesh=mesh)
         # dense byte count from shapes only — don't allocate a dense model
         # just to print the ratio
         shapes = jax.eval_shape(model.init, key)
@@ -138,13 +161,26 @@ def main(argv=None):
     else:
         params = model.init(key)
 
+    if mesh is not None and not args.ckpt_dir:
+        # checkpoint restore placed sharded already (restore_compressed);
+        # the prune/dense paths place here — dense rules for raw leaves,
+        # block-row slot sharding for BCSR/PaletteBCSR stores
+        params = jax.device_put(params, shd.param_shardings(params, mesh))
+
     prompt = jax.random.randint(key, (args.batch, args.prompt_len),
                                 0, cfg.vocab)
-    t0 = time.perf_counter()
-    out = generate(model, params, prompt, args.gen,
-                   temperature=args.temperature,
-                   rng=jax.random.PRNGKey(1))
-    dt = time.perf_counter() - t0
+    with mesh_ctx:
+        if args.logits_out:
+            cache = model.init_cache(args.batch, args.prompt_len + args.gen)
+            logits, _ = jax.jit(model.prefill)(params, prompt, cache)
+            np.save(args.logits_out,
+                    np.asarray(jax.device_get(logits)).astype(np.float32))
+            print(f"prefill logits -> {args.logits_out}")
+        t0 = time.perf_counter()
+        out = generate(model, params, prompt, args.gen,
+                       temperature=args.temperature,
+                       rng=jax.random.PRNGKey(1))
+        dt = time.perf_counter() - t0
     print(f"generated {out.shape} in {dt:.2f}s "
           f"({args.batch * args.gen / dt:.1f} tok/s)")
     print("sample:", out[0, :16].tolist())

@@ -41,7 +41,7 @@ from repro.core import metrics as metrics_lib
 from repro.core.optimizers import prox_adam, prox_rmsprop, prox_sgd
 from repro.data.synthetic import TokenStreamConfig, token_batch
 from repro.distributed import sharding as shd
-from repro.launch.mesh import make_host_mesh, make_production_mesh
+from repro.launch.mesh import mesh_from_flag
 from repro.models import frontends
 from repro.models.model_zoo import build
 from repro.sparse.compress import (CompressionPlan, compressed_size_bytes,
@@ -75,7 +75,18 @@ def main(argv=None):
                     choices=["prox_adam", "prox_rmsprop", "prox_sgd"])
     ap.add_argument("--ckpt-dir", default="")
     ap.add_argument("--mesh", default="none",
-                    choices=["none", "single", "multi"])
+                    help="none | single | multi | DATA,MODEL. SPMD training "
+                         "mesh: 'single'/'multi' are the production pod "
+                         "meshes, 'D,M' a host mesh over existing devices "
+                         "(CI forces 4 with XLA_FLAGS=--xla_force_host_"
+                         "platform_device_count=4 and runs --mesh 2,2). "
+                         "With --sparse the COMPRESSED pytree is sharded "
+                         "too: BlockCSR/PaletteBCSR block stores split "
+                         "along the block-row slot axis (the dense out-dim "
+                         "rule), index/gather tables and palettes "
+                         "replicate, and the sharded CompressedParams "
+                         "flows through debias retraining and the "
+                         "compressed checkpoint unchanged")
     ap.add_argument("--log-every", type=int, default=20)
     ap.add_argument("--sparse", action="store_true",
                     help="SpC-Retrain into BlockCSR: prox-SpC training with "
@@ -142,9 +153,12 @@ def main(argv=None):
             b = {"inputs": emb, "labels": b["labels"]}
         return b
 
-    mesh = None
-    if args.mesh != "none":
-        mesh = make_production_mesh(multi_pod=args.mesh == "multi")
+    mesh = mesh_from_flag(args.mesh)
+    if mesh is not None:
+        # place master params once; train steps then carry the shardings
+        # (the compressed pipeline re-places after compress_params — see
+        # run_spc_retrain_pipeline)
+        params = jax.device_put(params, shd.param_shardings(params, mesh))
 
     ckpt = Checkpointer(args.ckpt_dir) if args.ckpt_dir else None
     if ckpt is not None and ckpt.latest_step() is not None:

@@ -93,6 +93,21 @@ def apply_head(p: dict, x: Array, tie: bool, softcap: Optional[float],
     return shard_ann(logits, ("batch", "seq", "vocab"))
 
 
+def apply_proj(p: dict, x: Array, name: str,
+               sparse: Optional[dict] = None) -> Array:
+    """y = x @ p[name] for a stored 2D (in, out) projection.
+
+    A ``BlockCSR``/``PaletteBCSR`` entry in ``sparse`` (stored (out, in) by
+    ``compress_params``) dispatches ``sparse_matmul`` instead of the einsum
+    — the single dense-or-compressed dispatch shared by the RWKV
+    time/channel-mix and RG-LRU serve-from-compressed paths."""
+    if sparse and name in sparse:
+        y = sparse_ops.sparse_matmul(x.reshape(-1, x.shape[-1]),
+                                     sparse[name])
+        return y.reshape(*x.shape[:-1], -1).astype(x.dtype)
+    return jnp.einsum("...d,do->...o", x, p[name].astype(x.dtype))
+
+
 # ---------------------------------------------------------------------------
 # Activations
 # ---------------------------------------------------------------------------

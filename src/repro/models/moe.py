@@ -43,6 +43,7 @@ _CHECK_REP_KW = ("check_vma" if "check_vma"
 from repro.configs.base import ModelConfig, MoEConfig
 from repro.distributed.sharding import current_mesh, shard_ann
 from repro.models.layers import activation, truncated_normal_init
+from repro.sparse import ops as sparse_ops
 
 Array = jax.Array
 
@@ -73,9 +74,25 @@ def _capacity(n_tokens: int, e: MoEConfig) -> int:
 
 
 def apply_moe(p: dict, x: Array, cfg: ModelConfig,
-              impl: str = "auto") -> tuple[Array, dict]:
-    """x: (B, S, d) -> (B, S, d), aux losses {load_balance, z_loss}."""
+              impl: str = "auto",
+              sparse: dict | None = None) -> tuple[Array, dict]:
+    """x: (B, S, d) -> (B, S, d), aux losses {load_balance, z_loss}.
+
+    ``sparse`` maps expert projection names ({"ewi"|"ewg"|"ewo"}) to
+    E-stacked BlockCSR/PaletteBCSR weights (per-expert (out, in) slices,
+    built by ``sparse.compress.compress_params``); present entries run the
+    compressed kernel path via a ``lax.map`` over experts. Compressed
+    experts always take the single-program (gspmd) dispatch — under a mesh
+    GSPMD partitions the mapped expert FFNs like any other scanned
+    computation, while the shard_map EP path would need per-column BCSR
+    re-chunking (open ROADMAP item)."""
     mesh = current_mesh()
+    if sparse:
+        if impl == "shard_map":
+            raise ValueError("compressed (BCSR) experts serve through the "
+                             "gspmd dispatch; shard_map EP does not support "
+                             "sparse expert weights")
+        return _apply_moe_gspmd(p, x, cfg, sparse)
     if impl == "auto":
         use_sm = (mesh is not None and "model" in mesh.shape
                   and cfg.moe.n_experts % mesh.shape["model"] == 0)
@@ -187,7 +204,8 @@ def _apply_moe_shard_map(p: dict, x: Array, cfg: ModelConfig,
     return shard_ann(y, ("batch", "seq", "embed")), aux
 
 
-def _apply_moe_gspmd(p: dict, x: Array, cfg: ModelConfig) -> tuple[Array, dict]:
+def _apply_moe_gspmd(p: dict, x: Array, cfg: ModelConfig,
+                     sparse: dict | None = None) -> tuple[Array, dict]:
     e = cfg.moe
     b, s, d = x.shape
     t = b * s
@@ -228,11 +246,22 @@ def _apply_moe_gspmd(p: dict, x: Array, cfg: ModelConfig) -> tuple[Array, dict]:
     buf = shard_ann(buf, ("experts", "capacity", "embed"))
 
     # --- expert FFN (grouped einsum, experts sharded over 'model') ---------
-    hg = jnp.einsum("ecd,edf->ecf", buf, p["ewg"].astype(dt))
-    hi = jnp.einsum("ecd,edf->ecf", buf, p["ewi"].astype(dt))
-    h = f(hg) * hi
+    # Compressed experts: lax.map slices the E-stacked BCSR (same mechanism
+    # as the layer-stack scan) and runs sparse_matmul per expert — the
+    # custom_vjp still applies, so SpC-Retrain's SDDMM weight gradient
+    # reaches MoE expert data at resident slots only.
+    def emm(name, inp):
+        """(E, cap, in) x per-expert (in, out) -> (E, cap, out)."""
+        if sparse and name in sparse:
+            y = jax.lax.map(
+                lambda wx: sparse_ops.sparse_matmul(wx[1], wx[0]),
+                (sparse[name], inp))
+            return y.astype(dt)
+        return jnp.einsum("eci,eio->eco", inp, p[name].astype(dt))
+
+    h = f(emm("ewg", buf)) * emm("ewi", buf)
     h = shard_ann(h, ("experts", "capacity", "mlp"))
-    out_buf = jnp.einsum("ecf,efd->ecd", h, p["ewo"].astype(dt))
+    out_buf = emm("ewo", h)
     out_buf = shard_ann(out_buf, ("experts", "capacity", "embed"))
 
     # --- combine ------------------------------------------------------------

@@ -23,7 +23,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.distributed.sharding import shard_ann
-from repro.models.layers import truncated_normal_init
+from repro.models.layers import apply_proj, truncated_normal_init
 
 Array = jax.Array
 _C = 8.0
@@ -99,14 +99,17 @@ def rglru_step(p: dict, u: Array, h: Array) -> tuple[Array, Array]:
 
 
 def apply_rglru_block(p: dict, x: Array, cfg: ModelConfig,
-                      state: dict | None = None):
+                      state: dict | None = None,
+                      sparse: dict | None = None):
     """Griffin recurrent block. state None => train/prefill full-sequence.
 
     Returns (y, new_state) where state = {"h": (B,w), "conv": (B,cw-1,w)}.
+    ``sparse``: optional {"lru_in"|"lru_gate"|"lru_out": BlockCSR}
+    compressed projections (the three width-changing matmuls; the depthwise
+    conv and elementwise gates stay dense residue).
     """
-    dt = x.dtype
-    gate = jax.nn.gelu(jnp.einsum("bsd,dw->bsw", x, p["lru_gate"].astype(dt)))
-    u = jnp.einsum("bsd,dw->bsw", x, p["lru_in"].astype(dt))
+    gate = jax.nn.gelu(apply_proj(p, x, "lru_gate", sparse))
+    u = apply_proj(p, x, "lru_in", sparse)
     u = shard_ann(u, ("batch", "seq", "lru"))
     conv_state = state["conv"] if state is not None else None
     u, new_conv = _causal_conv(u, p["conv1d"], conv_state)
@@ -115,7 +118,7 @@ def apply_rglru_block(p: dict, x: Array, cfg: ModelConfig,
     else:
         h, h_last = rglru_step(p, u, state["h"])
     h = shard_ann(h, ("batch", "seq", "lru"))
-    y = jnp.einsum("bsw,wd->bsd", gate * h, p["lru_out"].astype(dt))
+    y = apply_proj(p, gate * h, "lru_out", sparse)
     y = shard_ann(y, ("batch", "seq", "embed"))
     return y, {"h": h_last, "conv": new_conv}
 

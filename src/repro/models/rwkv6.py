@@ -23,7 +23,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.distributed.sharding import shard_ann
-from repro.models.layers import truncated_normal_init
+from repro.models.layers import apply_proj, truncated_normal_init
 
 Array = jax.Array
 _LORA_R = 32
@@ -151,8 +151,11 @@ def wkv_step(r, k, v, logw, u, state):
 
 
 def apply_time_mix(p: dict, x: Array, cfg: ModelConfig,
-                   state: dict | None = None):
-    """RWKV-6 time mixing. state = {"S": (B,H,hd,hd), "shift": (B,d)}."""
+                   state: dict | None = None,
+                   sparse: dict | None = None):
+    """RWKV-6 time mixing. state = {"S": (B,H,hd,hd), "shift": (B,d)}.
+    ``sparse``: optional {"rwkv_r"|...|"rwkv_o": BlockCSR} compressed
+    projections (the r/k/v/g/o matmuls dispatch ``sparse_matmul``)."""
     dt = x.dtype
     hd = cfg.rwkv_head_dim
     prev = _token_shift(x, state["shift"] if state else None)
@@ -163,10 +166,10 @@ def apply_time_mix(p: dict, x: Array, cfg: ModelConfig,
         return (x32 + xx * p["mu"][name]).astype(dt)
 
     xr, xk, xv, xg, xw = (mix(nm) for nm in ("r", "k", "v", "g", "w"))
-    r = jnp.einsum("bsd,de->bse", xr, p["rwkv_r"].astype(dt))
-    k = jnp.einsum("bsd,de->bse", xk, p["rwkv_k"].astype(dt))
-    v = jnp.einsum("bsd,de->bse", xv, p["rwkv_v"].astype(dt))
-    g = jax.nn.silu(jnp.einsum("bsd,de->bse", xg, p["rwkv_g"].astype(dt)))
+    r = apply_proj(p, xr, "rwkv_r", sparse)
+    k = apply_proj(p, xk, "rwkv_k", sparse)
+    v = apply_proj(p, xv, "rwkv_v", sparse)
+    g = jax.nn.silu(apply_proj(p, xg, "rwkv_g", sparse))
 
     tdecay = p["time_decay_base"] + _apply_lora(p["lora_w"], xw)
     logw = -jnp.exp(tdecay.astype(jnp.float32))       # (B, S, d), <= 0
@@ -189,25 +192,26 @@ def apply_time_mix(p: dict, x: Array, cfg: ModelConfig,
     var = jnp.var(oh, axis=-1, keepdims=True)
     o = ((oh - mu) * jax.lax.rsqrt(var + 1e-5)).reshape(b, s, -1)
     o = (o * p["ln_x_scale"]).astype(dt) * g
-    y = jnp.einsum("bse,ed->bsd", o, p["rwkv_o"].astype(dt))
+    y = apply_proj(p, o, "rwkv_o", sparse)
     y = shard_ann(y, ("batch", "seq", "embed"))
     new_state = {"S": s_new, "shift": x[:, -1].astype(jnp.float32)}
     return y, new_state
 
 
-def apply_channel_mix(p: dict, x: Array, state: dict | None = None):
-    """RWKV FFN: sigmoid(W_r xr) * (W_v relu(W_k xk)^2)."""
+def apply_channel_mix(p: dict, x: Array, state: dict | None = None,
+                      sparse: dict | None = None):
+    """RWKV FFN: sigmoid(W_r xr) * (W_v relu(W_k xk)^2). ``sparse``:
+    optional {"cm_k"|"cm_v"|"cm_r": BlockCSR} compressed projections."""
     dt = x.dtype
     prev = _token_shift(x, state["shift"] if state else None)
     xx = (prev - x).astype(jnp.float32)
     x32 = x.astype(jnp.float32)
     xk = (x32 + xx * p["mu_k"]).astype(dt)
     xr = (x32 + xx * p["mu_r"]).astype(dt)
-    k = jnp.einsum("bsd,df->bsf", xk, p["cm_k"].astype(dt))
+    k = apply_proj(p, xk, "cm_k", sparse)
     k = shard_ann(k, ("batch", "seq", "mlp"))
-    kv = jnp.einsum("bsf,fd->bsd", jnp.square(jax.nn.relu(k)),
-                    p["cm_v"].astype(dt))
-    r = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", xr, p["cm_r"].astype(dt)))
+    kv = apply_proj(p, jnp.square(jax.nn.relu(k)), "cm_v", sparse)
+    r = jax.nn.sigmoid(apply_proj(p, xr, "cm_r", sparse))
     y = r * kv
     y = shard_ann(y, ("batch", "seq", "embed"))
     return y, {"shift": x[:, -1].astype(jnp.float32)}

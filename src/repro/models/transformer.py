@@ -19,9 +19,11 @@ scan body is configurable (train memory).
 a ``repro.sparse.compress.CompressedParams``. The sparse map mirrors the
 params nesting and its BlockCSR leaves are stacked over ``n_super`` (padded
 to a uniform slot count), so compressed weights ride through the layer-stack
-``lax.scan`` next to the dense residue; attention QKV/O, MLP, and head
-projections with a BCSR entry dispatch ``sparse_matmul`` — the paper's
-inference-in-compressed-form, whole-model.
+``lax.scan`` next to the dense residue; attention QKV/O, MLP, MoE expert
+(per-expert stacks, ``lax.map`` inside ``apply_moe``), RWKV time/channel-mix,
+RG-LRU and head projections with a BCSR entry dispatch ``sparse_matmul`` —
+the paper's inference-in-compressed-form, whole-model and
+architecture-complete.
 """
 from __future__ import annotations
 
@@ -100,16 +102,19 @@ def _apply_layer_train(p: dict, x: Array, cfg: ModelConfig, kind: str,
         mix = attention.apply_attention(p["attn"], h, cfg, positions,
                                         sparse=sp.get("attn"))
     elif kind == "rglru":
-        mix, _ = rglru.apply_rglru_block(p["rec"], h, cfg, None)
+        mix, _ = rglru.apply_rglru_block(p["rec"], h, cfg, None,
+                                         sparse=sp.get("rec"))
     elif kind == "rwkv":
-        mix, _ = rwkv6.apply_time_mix(p["tm"], h, cfg, None)
+        mix, _ = rwkv6.apply_time_mix(p["tm"], h, cfg, None,
+                                      sparse=sp.get("tm"))
     x = x + mix
     h = apply_norm(p["ffn_norm"], x, cfg.norm)
     aux = _zero_aux()
     if kind == "rwkv":
-        f, _ = rwkv6.apply_channel_mix(p["cm"], h, None)
+        f, _ = rwkv6.apply_channel_mix(p["cm"], h, None,
+                                       sparse=sp.get("cm"))
     elif cfg.moe is not None:
-        f, aux = moe_lib.apply_moe(p["moe"], h, cfg)
+        f, aux = moe_lib.apply_moe(p["moe"], h, cfg, sparse=sp.get("moe"))
     else:
         f = apply_mlp(p["mlp"], h, cfg.act, cfg.mlp_gated,
                       sparse_weights=sp.get("mlp"))
@@ -127,16 +132,17 @@ def _apply_layer_decode(p: dict, x: Array, cfg: ModelConfig, kind: str,
             p["attn"], h, cache["attn"], pos, cfg, sparse=sp.get("attn"))
     elif kind == "rglru":
         mix, new_cache["rec"] = rglru.apply_rglru_block(
-            p["rec"], h, cfg, cache["rec"])
+            p["rec"], h, cfg, cache["rec"], sparse=sp.get("rec"))
     elif kind == "rwkv":
         mix, new_cache["tm"] = rwkv6.apply_time_mix(
-            p["tm"], h, cfg, cache["tm"])
+            p["tm"], h, cfg, cache["tm"], sparse=sp.get("tm"))
     x = x + mix
     h = apply_norm(p["ffn_norm"], x, cfg.norm)
     if kind == "rwkv":
-        f, new_cache["cm"] = rwkv6.apply_channel_mix(p["cm"], h, cache["cm"])
+        f, new_cache["cm"] = rwkv6.apply_channel_mix(p["cm"], h, cache["cm"],
+                                                     sparse=sp.get("cm"))
     elif cfg.moe is not None:
-        f, _ = moe_lib.apply_moe(p["moe"], h, cfg)
+        f, _ = moe_lib.apply_moe(p["moe"], h, cfg, sparse=sp.get("moe"))
     else:
         f = apply_mlp(p["mlp"], h, cfg.act, cfg.mlp_gated,
                       sparse_weights=sp.get("mlp"))
@@ -158,15 +164,18 @@ def _apply_layer_prefill(p: dict, x: Array, cfg: ModelConfig, kind: str,
         mix, new_cache["attn"] = attention.prefill_attention(
             p["attn"], h, cache["attn"], positions, cfg, sparse=sp.get("attn"))
     elif kind == "rglru":
-        mix, new_cache["rec"] = rglru.apply_rglru_block(p["rec"], h, cfg, None)
+        mix, new_cache["rec"] = rglru.apply_rglru_block(
+            p["rec"], h, cfg, None, sparse=sp.get("rec"))
     elif kind == "rwkv":
-        mix, new_cache["tm"] = rwkv6.apply_time_mix(p["tm"], h, cfg, None)
+        mix, new_cache["tm"] = rwkv6.apply_time_mix(p["tm"], h, cfg, None,
+                                                    sparse=sp.get("tm"))
     x = x + mix
     h = apply_norm(p["ffn_norm"], x, cfg.norm)
     if kind == "rwkv":
-        f, new_cache["cm"] = rwkv6.apply_channel_mix(p["cm"], h, None)
+        f, new_cache["cm"] = rwkv6.apply_channel_mix(p["cm"], h, None,
+                                                     sparse=sp.get("cm"))
     elif cfg.moe is not None:
-        f, _ = moe_lib.apply_moe(p["moe"], h, cfg)
+        f, _ = moe_lib.apply_moe(p["moe"], h, cfg, sparse=sp.get("moe"))
     else:
         f = apply_mlp(p["mlp"], h, cfg.act, cfg.mlp_gated,
                       sparse_weights=sp.get("mlp"))

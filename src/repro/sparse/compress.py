@@ -15,14 +15,21 @@ expects, ``y = x @ W'``):
     attention wo        (h, hd, d)  -> (d, h*hd)
     mlp wi/wg           (d, ff)     -> (ff, d)
     mlp wo              (ff, d)     -> (d, ff)
+    moe ewi/ewg         (E, d, ff)  -> per-expert (ff, d)
+    moe ewo             (E, ff, d)  -> per-expert (d, ff)
+    rwkv tm r/k/v/g/o   (d, e)      -> (e, d)
+    rwkv cm_k/cm_v/cm_r (d, ff)...  -> 2D transpose
+    rg-lru in/gate/out  (d, w)...   -> 2D transpose
     head                (d, vocab)  -> (vocab, d)
 
-Weights inside the scanned layer stack carry a leading ``n_super`` axis; each
-slice is compressed separately, padded to a uniform slot count
-(``formats.pad_bcsr``) and stacked, so the compressed stack rides through
-``lax.scan`` exactly like the dense one. Matrices that don't compress (too
-small, too dense, or BCSR bytes >= dense bytes) stay dense in the residue —
-the ``CompressionPlan`` dense fallback.
+Weights inside the scanned layer stack carry a leading ``n_super`` axis, and
+MoE expert projections an additional per-expert axis — every leading stack
+axis is treated the same way: each 2D slice is compressed separately, padded
+to a uniform slot count (``formats.pad_bcsr``) and stacked, so the compressed
+stack rides through ``lax.scan`` (layer axis) and ``lax.map`` (expert axis,
+inside ``apply_moe``) exactly like the dense one. Matrices that don't
+compress (too small, too dense, or BCSR bytes >= dense bytes) stay dense in
+the residue — the ``CompressionPlan`` dense fallback.
 
 When the plan sets ``quantize_bits`` (8 or 4, with per-layer overrides),
 the emitted leaves are ``PaletteBCSR``: block data k-means-clustered to a
@@ -50,7 +57,21 @@ PyTree = Any
 
 # per-layer sub-dicts and the projection names eligible for compression
 _LAYER_TARGETS = {"attn": ("wq", "wk", "wv", "wo"),
-                  "mlp": ("wi", "wg", "wo")}
+                  "mlp": ("wi", "wg", "wo"),
+                  "moe": ("ewi", "ewg", "ewo"),          # per-expert stacks
+                  "tm": ("rwkv_r", "rwkv_k", "rwkv_v", "rwkv_g", "rwkv_o"),
+                  "cm": ("cm_k", "cm_v", "cm_r"),
+                  "rec": ("lru_in", "lru_gate", "lru_out")}
+
+# MoE expert projections: the leading expert axis is a stack axis (compressed
+# per expert, padded uniformly, stacked), exactly like the scanned layer axis
+_PER_EXPERT = ("ewi", "ewg", "ewo")
+
+
+def _lead_axes(name: str, stacked: bool) -> int:
+    """Leading stack axes ahead of the per-matrix layout: the scanned layer
+    axis (when inside ``layers/``), plus the per-expert axis for MoE."""
+    return int(stacked) + int(name in _PER_EXPERT)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -180,7 +201,8 @@ def prune_blocks_for_plan(params: PyTree, plan: CompressionPlan,
 
 def _walk_targets(params: PyTree, handle) -> PyTree:
     """Apply ``handle(path, arr)`` to every compressible leaf, copying the
-    tree. Stacked layers are handled slice-wise with a uniform outcome."""
+    tree. Leading stack axes (scanned layers, MoE experts) are handled
+    slice-wise with a uniform outcome."""
     out = jax.tree.map(lambda x: x, params)   # structural copy
 
     def per_layer(layer, path, stacked):
@@ -192,10 +214,12 @@ def _walk_targets(params: PyTree, handle) -> PyTree:
                     continue
                 arr = np.asarray(layer[sub][name])
                 p = f"{path}/{sub}/{name}"
-                if stacked:
-                    slices = [np.asarray(handle(p, s)) for s in arr]
-                    layer[sub][name] = jnp.asarray(np.stack(slices),
-                                                   dtype=arr.dtype)
+                lead = _lead_axes(name, stacked)
+                if lead:
+                    flat = arr.reshape((-1,) + arr.shape[lead:])
+                    slices = [np.asarray(handle(p, s)) for s in flat]
+                    layer[sub][name] = jnp.asarray(
+                        np.stack(slices).reshape(arr.shape), dtype=arr.dtype)
                 else:
                     layer[sub][name] = jnp.asarray(handle(p, arr),
                                                    dtype=arr.dtype)
@@ -215,8 +239,12 @@ def _walk_targets(params: PyTree, handle) -> PyTree:
 # ---------------------------------------------------------------------------
 
 def _try_compress(arr: np.ndarray, path: str, plan: CompressionPlan,
-                  stacked: bool) -> Optional[BlockCSR]:
-    slices = list(arr) if stacked else [arr]
+                  n_stack: int) -> Optional[BlockCSR]:
+    """``n_stack`` leading axes of ``arr`` are stack axes (scanned layers
+    and/or MoE experts); each remaining-slice is compressed separately,
+    padded to uniform slot counts and stacked back field-wise."""
+    slices = (list(arr.reshape((-1,) + arr.shape[n_stack:])) if n_stack
+              else [arr])
     views = [_as_out_in(path, s) for s in slices]
     if views[0] is None or views[0].size < plan.min_size:
         return None
@@ -238,14 +266,17 @@ def _try_compress(arr: np.ndarray, path: str, plan: CompressionPlan,
     ms = [pad_bcsr(m, n_slots, jmax, jmax_t) for m in ms]
     if ms[0].nbytes >= views[0].size * views[0].dtype.itemsize:
         return None                           # dense fallback: no byte win
-    if not stacked:
+    if not n_stack:
         return ms[0]
-    return jax.tree.map(lambda *xs: jnp.stack(xs), *ms)
+    out = jax.tree.map(lambda *xs: jnp.stack(xs), *ms)
+    if n_stack > 1:                           # e.g. (L, E, ...) MoE stacks
+        out = jax.tree.map(
+            lambda a: a.reshape(arr.shape[:n_stack] + a.shape[1:]), out)
+    return out
 
 
-def _placeholder(arr, stacked: bool):
-    lead = (arr.shape[0],) if stacked else ()
-    return jnp.zeros(lead, arr.dtype)
+def _placeholder(arr, n_stack: int):
+    return jnp.zeros(arr.shape[:n_stack], arr.dtype)
 
 
 def compress_params(params: PyTree,
@@ -268,11 +299,12 @@ def compress_params(params: PyTree,
                 if name not in layer[sub]:
                     continue
                 arr = np.asarray(layer[sub][name])
-                m = _try_compress(arr, f"{path}/{sub}/{name}", plan, stacked)
+                lead = _lead_axes(name, stacked)
+                m = _try_compress(arr, f"{path}/{sub}/{name}", plan, lead)
                 if m is None:
                     continue
                 sp_out.setdefault(sub, {})[name] = m
-                layer[sub][name] = _placeholder(arr, stacked)
+                layer[sub][name] = _placeholder(arr, lead)
 
     if "layers" in dense:
         for lkey, layer in dense["layers"].items():
@@ -286,10 +318,10 @@ def compress_params(params: PyTree,
         if sp:
             sparse.setdefault("rem", {})[lkey] = sp
     if "head" in dense:
-        m = _try_compress(np.asarray(dense["head"]), "head", plan, False)
+        m = _try_compress(np.asarray(dense["head"]), "head", plan, 0)
         if m is not None:
             sparse["head"] = m
-            dense["head"] = _placeholder(np.asarray(dense["head"]), False)
+            dense["head"] = _placeholder(np.asarray(dense["head"]), 0)
     cp = CompressedParams(dense=dense, sparse=sparse, plan=plan)
     if plan.quantize_bits or plan.quantize_overrides:
         cp = quantize_compressed(cp)            # emit PaletteBCSR leaves
@@ -303,8 +335,9 @@ def compress_params(params: PyTree,
 def quantize_bcsr(m: BlockCSR, bits: int, iters: int = 25) -> PaletteBCSR:
     """k-means palette-quantize a BlockCSR's block store (host-side).
 
-    Per layer slice (stacked stores quantize each ``n_super`` slice with its
-    own palette): cluster the NONZERO block entries to 2**bits - 1 values
+    Per layer slice (stacked stores quantize each leading-axis slice — layer
+    and, for MoE, each expert — with its own palette): cluster the NONZERO
+    block entries to 2**bits - 1 values
     via ``core.quantize.kmeans_palette`` and reserve code 0 for exact zero —
     intra-block zeros, the pad slot 0, and ``pad_bcsr`` padding slots all
     map to code 0 and reproduce bit-exactly, so the sparsity pattern (and
@@ -317,8 +350,8 @@ def quantize_bcsr(m: BlockCSR, bits: int, iters: int = 25) -> PaletteBCSR:
     if bits == 4 and bc % 2:
         raise ValueError(f"bits=4 nibble packing needs even bc, got {m.block}")
     data = np.asarray(jax.device_get(m.data))
-    stacked = data.ndim == 4
-    slices = data if stacked else data[None]
+    lead = data.shape[:-3]                      # (L,) layers, (L, E) MoE, ()
+    slices = data.reshape((-1,) + data.shape[-3:]) if lead else data[None]
     n_levels = (1 << bits) - 1                  # code 0 is reserved for 0.0
     codes_l, pal_l = [], []
     for sl in slices:
@@ -331,8 +364,9 @@ def quantize_bcsr(m: BlockCSR, bits: int, iters: int = 25) -> PaletteBCSR:
         pal[1:] = np.asarray(palette)
         codes_l.append(codes)
         pal_l.append(pal)
-    codes = np.stack(codes_l) if stacked else codes_l[0]
-    pal = np.stack(pal_l) if stacked else pal_l[0]
+    codes = np.stack(codes_l).reshape(data.shape) if lead else codes_l[0]
+    pal = (np.stack(pal_l).reshape(lead + (1 << bits,)) if lead
+           else pal_l[0])
     codes = jnp.asarray(codes)
     if bits == 4:
         codes = pack_uint4(codes)
@@ -424,29 +458,39 @@ def make_plan_prox(plan: CompressionPlan) -> Callable:
         stacked = p.startswith("layers/")
         nd = z.ndim - (1 if stacked else 0)     # per-layer rank
         wrapped = f"/{p}/"
+
+        def _in(sub, rank) -> bool:
+            return (f"/{sub}/" in wrapped and leaf in _LAYER_TARGETS[sub]
+                    and nd == rank)
+
         eligible = (
             ("/attn/" in wrapped and leaf in _LAYER_TARGETS["attn"]
              and nd in (2, 3))
-            or ("/mlp/" in wrapped and leaf in _LAYER_TARGETS["mlp"]
-                and nd == 2)
+            or _in("mlp", 2)
+            or _in("moe", 3)                    # per-expert (E, in, out)
+            or _in("tm", 2) or _in("cm", 2) or _in("rec", 2)
             or (leaf == "head" and nd == 2))
         if not eligible:
             return z
         br, bc = plan.block_for(p)
 
+        def prox2d(flat):
+            if flat.size < plan.min_size:
+                return flat
+            # (in, out) view with transposed tiles == plan grid on (out, in)
+            return prox_lib.prox_group_l1_blocks(flat, tau, block=(bc, br))
+
         def one(zi):
             shp = zi.shape
+            if leaf in _PER_EXPERT:                    # (E, in, out) stack
+                return jax.vmap(prox2d)(zi)
             if zi.ndim == 3 and leaf in _ATTN_QKV:     # (d, h, hd): in, out
                 flat = zi.reshape(shp[0], -1)
             elif zi.ndim == 3:                         # attn wo (h, hd, d)
                 flat = zi.reshape(-1, shp[-1])
             else:                                      # 2D stored (in, out)
                 flat = zi
-            if flat.size < plan.min_size:
-                return zi
-            # (in, out) view with transposed tiles == plan grid on (out, in)
-            return prox_lib.prox_group_l1_blocks(
-                flat, tau, block=(bc, br)).reshape(shp)
+            return prox2d(flat).reshape(shp)
 
         return jax.vmap(one)(z) if stacked else one(z)
 
@@ -518,9 +562,8 @@ def densify_compressed(cp: CompressedParams, like: PyTree) -> PyTree:
 
     out = jax.tree.map(merge, like, cp.dense)
 
-    def to_stored(m, path: str, orig_shape, idx=None):
-        sl = m if idx is None else jax.tree.map(lambda a: a[idx], m)
-        mat = np.asarray(sl.to_dense())[:m.shape[0], :m.shape[1]]
+    def to_stored(sl, path: str, orig_shape):
+        mat = np.asarray(sl.to_dense())[:sl.shape[0], :sl.shape[1]]
         return _from_out_in(path, mat, orig_shape)
 
     for name, m in iter_bcsr(cp):
@@ -528,11 +571,15 @@ def densify_compressed(cp: CompressedParams, like: PyTree) -> PyTree:
         tgt = out
         for k in keys[:-1]:
             tgt = tgt[k]
-        ref = tgt[keys[-1]]
-        if keys[0] == "layers":                 # stacked over n_super
-            tgt[keys[-1]] = np.stack(
-                [to_stored(m, name, ref.shape[1:], i)
-                 for i in range(ref.shape[0])]).astype(ref.dtype)
+        ref = np.asarray(tgt[keys[-1]])
+        store = m.codes if isinstance(m, PaletteBCSR) else m.data
+        lead = store.ndim - 3                   # layer and/or expert axes
+        if lead:
+            mats = [to_stored(jax.tree.map(lambda a, i=i: a[i], m),
+                              name, ref.shape[lead:])
+                    for i in np.ndindex(*store.shape[:lead])]
+            tgt[keys[-1]] = np.stack(mats).reshape(ref.shape) \
+                .astype(ref.dtype)
         else:
             tgt[keys[-1]] = to_stored(m, name, ref.shape).astype(ref.dtype)
     return jax.tree.map(jnp.asarray, out)
@@ -598,14 +645,14 @@ def compression_summary(cp: CompressedParams) -> str:
     for name, m in iter_bcsr(cp):
         grid = int(np.prod(m.block_grid))
         store = m.codes if isinstance(m, PaletteBCSR) else m.data
-        stack = store.ndim == 4
-        n = store.shape[0] if stack else 1
+        lead = store.ndim - 3                   # layer and/or expert axes
+        n = int(np.prod(store.shape[:lead])) if lead else 1
         fmt = f"pal{m.bits}" if isinstance(m, PaletteBCSR) else "bcsr"
         sparse_total += m.nbytes
         lines.append(
             f"{name:44s} {str(m.shape):>14s} {str(m.block):>10s} "
             f"{fmt:>6s} {m.n_blocks:>6d}/{grid:<7d} {m.nbytes:>10d}"
-            + (f"  x{n} layers" if stack else ""))
+            + (f"  x{n} slices" if lead else ""))
     dense_residue = sum(int(l.size) * l.dtype.itemsize
                         for l in jax.tree.leaves(cp.dense))
     lines.append(f"{'dense residue (embeddings/norms/fallback)':92s} "

@@ -228,8 +228,9 @@ def unpack_uint4(packed):
 def dequantize_codes(codes, palette, bits: int):
     """Palette lookup: codes (uint8, possibly nibble-packed) -> fp blocks.
 
-    ``palette`` is (P,) for a single matrix or (L, P) for a stacked layer
-    store (then ``codes`` carries the matching leading L axis). jit-safe.
+    ``palette`` is (P,) for a single matrix, (L, P) for a stacked layer
+    store, or (L, E, P) for a per-expert MoE stack (``codes`` carries the
+    matching leading axes). jit-safe.
     """
     if bits == 4:
         codes = unpack_uint4(codes)
@@ -237,9 +238,12 @@ def dequantize_codes(codes, palette, bits: int):
     def take(c, p):
         return jnp.take(p, c.astype(jnp.int32))
 
-    if palette.ndim == 2:                       # stacked over n_super
-        return jax.vmap(take)(codes, palette)
-    return take(codes, palette)
+    if palette.ndim == 1:
+        return take(codes, palette)
+    lead = palette.shape[:-1]                   # stacked layer/expert axes
+    cf = codes.reshape((-1,) + codes.shape[len(lead):])
+    pf = palette.reshape(-1, palette.shape[-1])
+    return jax.vmap(take)(cf, pf).reshape(codes.shape)
 
 
 @partial(jax.tree_util.register_dataclass,

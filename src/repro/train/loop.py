@@ -44,6 +44,7 @@ from repro.checkpoint.checkpointer import Checkpointer
 from repro.core import masks as masks_lib
 from repro.core import metrics as metrics_lib
 from repro.core.optimizers import ProxOptimizer
+from repro.distributed import sharding as shd
 from repro.sparse.compress import (CompressionPlan, compress_params,
                                    compressed_size_bytes, split_trainable)
 from repro.train.state import TrainState
@@ -180,6 +181,14 @@ def run_spc_retrain_pipeline(params,
     report = {"spc": metrics_lib.total_compression(state.params)}
 
     cp = compress_params(state.params, plan)
+    mesh = shd.current_mesh()
+    if mesh is not None:
+        # compress_params builds the BCSR structures host-side; under the
+        # production mesh re-place the compressed pytree so block stores are
+        # row-sharded and index tables replicated. split_trainable reuses
+        # these arrays, so the debias phase trains sharded without any
+        # further placement.
+        cp = jax.device_put(cp, shd.param_shardings(cp, mesh))
     dense_bytes = sum(int(l.size) * l.dtype.itemsize
                       for l in jax.tree.leaves(state.params))
     report["bcsr_bytes"] = compressed_size_bytes(cp)

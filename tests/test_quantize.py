@@ -89,3 +89,16 @@ def test_huffman_entropy_bound():
     # uniform distribution -> ~1 bit/symbol
     uniform = huffman_bits_estimate(np.asarray([0, 1] * 50), nz)
     assert uniform == pytest.approx(100.0, rel=1e-6)
+
+
+def test_kmeans_rejects_tracers():
+    """kmeans_palette is host-side: calling it under jit tracing (e.g. from
+    a sharded jitted step) must fail loudly with guidance, not crash on the
+    data-dependent bool() or bake in one branch."""
+    w = jnp.asarray(np.random.default_rng(0).normal(size=(8, 8)),
+                    jnp.float32)
+    with pytest.raises(TypeError, match="host-side"):
+        jax.jit(lambda x: kmeans_palette(x, 4)[0])(w)
+    # concrete (including sharded-then-gathered) inputs still work
+    palette, q, assign = kmeans_palette(w, 4)
+    assert np.asarray(palette).shape == (4,)

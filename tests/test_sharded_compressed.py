@@ -1,0 +1,244 @@
+"""Sharded compressed runtime: ``param_shardings`` on BlockCSR/PaletteBCSR
+leaves, and the end-to-end sharded-vs-single-device parity.
+
+Rules under test (distributed/sharding.py):
+  * index arrays (col_idx/row_ptr/gather tables) and palettes REPLICATE,
+  * the block store (data/codes) shards along the slot axis — the
+    block-row-major storage axis, i.e. the compressed analogue of the
+    dense out-dim rule for that path — for every layout: 2D (head),
+    layer-stacked, and MoE per-expert (L, E) stacks,
+  * ``split_trainable`` reuses the same arrays, so shardings survive into
+    the SpC-Retrain debias view (and its ``bcsr_data`` paths re-derive the
+    same rule),
+  * the pad_bcsr empty-layer edge (an all-zero slice) stays well-formed.
+
+The in-process tests run on a (1, 1) mesh (axis size 1 keeps every
+divisibility check true, so the *rule* is visible in the spec); the
+subprocess test forces 8 host devices and checks real (2, 4) sharding plus
+logits parity.
+"""
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed import sharding as shd
+from repro.launch.mesh import make_host_mesh, mesh_from_flag
+from repro.models.model_zoo import build
+from repro.sparse.compress import (CompressionPlan, compress_params,
+                                   prune_blocks_for_plan, quantize_bcsr,
+                                   split_trainable)
+from repro.sparse.formats import dense_to_bcsr, pad_bcsr
+
+PLAN = CompressionPlan(block=(8, 64), min_sparsity=0.3, min_size=4096)
+
+
+def _mesh11():
+    return make_host_mesh(1, 1)
+
+
+def _sparse_w(rows=7, shape=(64, 128), seed=0):
+    """(out, in) matrix with ``rows`` nonzero 8-row block rows -> rows+1
+    slots (pad slot 0 included)."""
+    w = np.zeros(shape, np.float32)
+    rng = np.random.default_rng(seed)
+    for r in range(rows):
+        w[r * 8:(r + 1) * 8, :64] = rng.normal(size=(8, 64))
+    return w
+
+
+def test_row_shard_2d_and_replicated_indices():
+    mesh = _mesh11()
+    m = dense_to_bcsr(_sparse_w(), (8, 64))
+    sh = shd.param_shardings({"head": m}, mesh)["head"]
+    assert sh.data.spec == P("model", None, None)   # vocab -> model
+    for f in ("col_idx", "row_ptr", "gather_idx", "gather_blk",
+              "gather_nnz", "gather_t_idx", "gather_t_blk", "gather_t_nnz"):
+        assert getattr(sh, f).spec == P(), f
+
+
+def test_row_shard_follows_dense_rule_per_path():
+    mesh = _mesh11()
+    m = dense_to_bcsr(_sparse_w(), (8, 64))
+    for sub, name, axis in [("attn", "wq", "model"),   # heads
+                            ("mlp", "wi", "model"),    # mlp
+                            ("mlp", "wo", "data"),     # embed (FSDP)
+                            ("tm", "rwkv_r", "model"),  # embed2
+                            ("rec", "lru_in", "model"),  # lru
+                            ("cm", "cm_v", "data")]:   # embed
+        tree = {"rem": {"r0": {sub: {name: m}}}}
+        sh = shd.param_shardings(tree, mesh)["rem"]["r0"][sub][name]
+        assert sh.data.spec == P(axis, None, None), (sub, name,
+                                                     sh.data.spec)
+
+
+def test_row_shard_stacked_and_moe_layouts():
+    mesh = _mesh11()
+    m = dense_to_bcsr(_sparse_w(), (8, 64))
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), m, m)       # (L=2, ...)
+    moe = jax.tree.map(lambda *xs: jnp.stack(xs), stacked, stacked)  # (L, E)
+    sh = shd.param_shardings(
+        {"layers": {"b0": {"mlp": {"wi": stacked}}}}, mesh)
+    spec = sh["layers"]["b0"]["mlp"]["wi"].data.spec
+    assert spec == P(None, "model", None, None)  # slot axis 1, L repl
+    sh = shd.param_shardings(
+        {"layers": {"b0": {"moe": {"ewi": moe}}}}, mesh)
+    spec = sh["layers"]["b0"]["moe"]["ewi"].data.spec
+    assert spec == P(None, None, "model", None, None)  # (L, E, slots..)
+
+
+def test_palette_codes_shard_palette_replicates():
+    mesh = _mesh11()
+    q = quantize_bcsr(dense_to_bcsr(_sparse_w(), (8, 64)), 8)
+    sh = shd.param_shardings({"rem": {"r0": {"mlp": {"wi": q}}}}, mesh)
+    sh = sh["rem"]["r0"]["mlp"]["wi"]
+    assert sh.codes.spec == P("model", None, None)
+    assert sh.palette.spec == P()
+    assert sh.col_idx.spec == P()
+
+
+def test_empty_layer_pad_bcsr_edge():
+    """A fully-pruned slice (n_blocks == 0, only the pad slot) padded up
+    alongside a non-empty slice still gets a well-formed sharding."""
+    mesh = _mesh11()
+    full = dense_to_bcsr(_sparse_w(), (8, 64))
+    empty = dense_to_bcsr(np.zeros((64, 128), np.float32), (8, 64))
+    empty = pad_bcsr(empty, full.data.shape[0], full.gather_idx.shape[1],
+                     full.gather_t_idx.shape[1])
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), full, empty)
+    sh = shd.param_shardings({"layers": {"b0": {"mlp": {"wi": stacked}}}},
+                             mesh)["layers"]["b0"]["mlp"]["wi"]
+    assert sh.data.spec == P(None, "model", None, None)
+    placed = jax.device_put(stacked, sh)
+    np.testing.assert_array_equal(np.asarray(placed.data),
+                                  np.asarray(stacked.data))
+
+
+class _FakeMesh:
+    """Only .shape is consulted by the spec assignment."""
+    shape = {"data": 2, "model": 2}
+
+
+def test_nondividing_slot_count_replicates():
+    """Divisibility fallback: on a model=2 axis an odd slot count must
+    replicate rather than error (same silent-replication rule as dense)."""
+    m7 = dense_to_bcsr(_sparse_w(rows=6), (8, 64))   # 7 slots (odd)
+    spec = shd._bcsr_row_spec("['head']", np.asarray(m7.data), _FakeMesh(),
+                              shd.PARAM_RULES)
+    assert all(s is None for s in tuple(spec)), spec
+    m8 = dense_to_bcsr(_sparse_w(rows=7), (8, 64))   # 8 slots: shards
+    spec = shd._bcsr_row_spec("['head']", np.asarray(m8.data), _FakeMesh(),
+                              shd.PARAM_RULES)
+    assert tuple(spec)[0] == "model", spec
+
+
+def test_split_trainable_preserves_shardings():
+    model = build("smollm-360m", reduced=True)
+    params = model.init(jax.random.PRNGKey(0))
+    pruned = prune_blocks_for_plan(params, PLAN, 0.75)
+    cp = compress_params(pruned, PLAN)
+    mesh = _mesh11()
+    cp = jax.device_put(cp, shd.param_shardings(cp, mesh))
+    trainable, rebuild = split_trainable(cp)
+    for key, leaf in trainable["bcsr_data"].items():
+        assert isinstance(leaf.sharding, jax.sharding.NamedSharding), key
+        # the bcsr_data path re-derives the SAME rule param_shardings used
+        resh = shd.param_shardings(trainable, mesh)["bcsr_data"][key]
+        assert leaf.sharding.spec == resh.spec, key
+    rebuilt = rebuild(trainable)
+    flat_a = jax.tree.leaves(cp)
+    flat_b = jax.tree.leaves(rebuilt)
+    for a, b in zip(flat_a, flat_b):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_compressed_params_shardings_whole_tree():
+    """param_shardings over a full CompressedParams: dense residue follows
+    the dense rules, every BCSR leaf mirrors into per-field shardings."""
+    model = build("smollm-360m", reduced=True)
+    params = model.init(jax.random.PRNGKey(0))
+    pruned = prune_blocks_for_plan(params, PLAN, 0.75)
+    cp = compress_params(pruned, PLAN)
+    mesh = _mesh11()
+    sh = shd.param_shardings(cp, mesh)
+    placed = jax.device_put(cp, sh)            # structures must line up
+    l0, _ = jax.jit(model.prefill)(
+        cp, jnp.zeros((2, 4), jnp.int32), model.init_cache(2, 8))
+    with shd.use_mesh(mesh):
+        l1, _ = jax.jit(model.prefill)(
+            placed, jnp.zeros((2, 4), jnp.int32), model.init_cache(2, 8))
+    np.testing.assert_allclose(np.asarray(l0), np.asarray(l1),
+                               atol=1e-5, rtol=1e-5)
+
+
+def test_mesh_from_flag():
+    assert mesh_from_flag("none") is None
+    m = mesh_from_flag("1,1")
+    assert dict(m.shape) == {"data": 1, "model": 1}
+    with pytest.raises(SystemExit):
+        mesh_from_flag("bogus")
+    with pytest.raises(SystemExit):
+        mesh_from_flag("64,64")                # more devices than exist
+
+
+_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json
+import jax, jax.numpy as jnp
+import numpy as np
+
+from repro.distributed import sharding as shd
+from repro.launch.mesh import make_host_mesh
+from repro.models.model_zoo import build
+from repro.sparse.compress import (CompressionPlan, compress_params,
+                                   prune_blocks_for_plan, split_trainable)
+
+mesh = make_host_mesh(2, 4)
+PLAN = CompressionPlan(block=(8, 64), min_sparsity=0.3, min_size=4096)
+model = build("olmoe-1b-7b", reduced=True)
+params = model.init(jax.random.PRNGKey(0))
+pruned = prune_blocks_for_plan(params, PLAN, 0.75)
+cp = compress_params(pruned, PLAN)
+shardings = shd.param_shardings(cp, mesh)
+cps = jax.device_put(cp, shardings)
+
+prompt = jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0,
+                            model.cfg.vocab)
+l0, _ = jax.jit(model.prefill)(cp, prompt, model.init_cache(2, 16))
+with shd.use_mesh(mesh):
+    l1, _ = jax.jit(model.prefill)(cps, prompt, model.init_cache(2, 16))
+
+tr, _ = split_trainable(cps)
+ewi = tr["bcsr_data"]["layers/b0_attn/moe/ewi"]
+print(json.dumps({
+    "n_devices": jax.device_count(),
+    "err": float(np.max(np.abs(np.asarray(l0) - np.asarray(l1)))),
+    "ewi_spec": str(ewi.sharding.spec),
+    "wq_index_repl": str(
+        cps.sparse["layers"]["b0_attn"]["attn"]["wq"].col_idx.sharding.spec),
+}))
+"""
+
+
+@pytest.mark.slow
+def test_sharded_compressed_prefill_matches_single_device():
+    """8 forced host devices, (2, 4) mesh: compressed prefill under the mesh
+    must match the unsharded run (the CI multi-device job asserts the same
+    through the CLIs at 1e-4)."""
+    env = dict(os.environ,
+               PYTHONPATH=os.path.abspath(
+                   os.path.join(os.path.dirname(__file__), "..", "src")))
+    out = subprocess.run([sys.executable, "-c", _SCRIPT], env=env,
+                         capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, out.stderr[-3000:]
+    result = json.loads(out.stdout.strip().splitlines()[-1])
+    assert result["n_devices"] == 8
+    assert result["err"] < 1e-4, result
+    assert result["wq_index_repl"] == "PartitionSpec()"
