@@ -35,20 +35,33 @@ BASELINE = "benchmarks/BENCH_baseline.json"
 DECODE_ROW = "inference_speedup/decode_dense_vs_compressed"
 
 
-def _field(derived: str, name: str) -> float:
+def _field(derived: str, name: str, required: bool = True):
     m = re.search(rf"{name}=([0-9.]+)", derived)
     if not m:
-        raise SystemExit(f"no {name} in {derived!r}")
+        if required:
+            raise SystemExit(f"no {name} in {derived!r}")
+        return None
     return float(m.group(1))
 
 
-def decode_stats(report: dict) -> tuple[float, float]:
-    """(bcsr_tok_s, dense_tok_s) from a bench JSON report."""
+def decode_stats(report: dict, required: bool = True):
+    """(bcsr_tok_s, dense_tok_s) from a bench JSON report.
+
+    ``required=False`` (the baseline side) returns None instead of failing
+    when the row or a metric key is absent — a metric that exists in the PR
+    report but not yet in the committed baseline is skipped with a warning,
+    not a crash, so adding new bench metrics doesn't break the gate on
+    their first run (re-baseline with --update to start gating them)."""
     for row in report["rows"]:
         if row["name"] == DECODE_ROW:
-            return (_field(row["derived"], "bcsr_tok_s"),
-                    _field(row["derived"], "dense_tok_s"))
-    raise SystemExit(f"row {DECODE_ROW!r} missing from report")
+            bcsr = _field(row["derived"], "bcsr_tok_s", required)
+            dense = _field(row["derived"], "dense_tok_s", required)
+            if bcsr is None or dense is None:
+                return None
+            return (bcsr, dense)
+    if required:
+        raise SystemExit(f"row {DECODE_ROW!r} missing from report")
+    return None
 
 
 def main(argv=None) -> int:
@@ -76,7 +89,14 @@ def main(argv=None) -> int:
     with open(args.report) as f:
         pr_bcsr, pr_dense = decode_stats(json.load(f))
     with open(args.baseline) as f:
-        base_bcsr, base_dense = decode_stats(json.load(f))
+        base = decode_stats(json.load(f), required=False)
+    if base is None:
+        print(f"WARNING: {DECODE_ROW!r} metrics present in {args.report} "
+              f"but missing from baseline {args.baseline} — skipping the "
+              "gate for this metric (run with --update and commit the "
+              "result to start gating it)")
+        return 0
+    base_bcsr, base_dense = base
 
     if args.absolute:
         metric, base_metric, unit = pr_bcsr, base_bcsr, "tok/s"

@@ -1,0 +1,185 @@
+"""Continuous-batching engine benchmark: aggregate tokens/s and p50/p95
+latency at several request mixes, engine vs the sequential single-request
+``generate`` path, on dense / BlockCSR / PaletteBCSR weights.
+
+The headline number is the batching win on the compressed serving path:
+one engine tick decodes every active slot in a single jitted dispatch,
+so aggregate compressed-decode tokens/s should beat running the same
+requests one-by-one through ``generate`` (whose per-token dispatch cost is
+the same but amortized over batch=1).
+
+    PYTHONPATH=src python -m benchmarks.serve_engine --json BENCH_engine.json
+
+Rows follow the BENCH json schema (``name`` / ``us_per_call`` /
+``derived``), same as ``benchmarks.inference_speedup`` — CI uploads the
+JSON alongside ``BENCH_pr.json``. ``--assert-speedup`` exits nonzero if
+the batched compressed engine fails to beat sequential compressed serving
+(the acceptance gate for the engine's reason to exist).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+
+import numpy as np
+
+# request mixes: (name, [(prompt_len, gen), ...])
+MIXES = {
+    "decode_heavy": [(8, 24)] * 8,
+    "mixed_len": [(8, 16)] * 4 + [(48, 16)] * 4,
+    "prefill_heavy": [(64, 8)] * 8,
+}
+
+
+def _requests(mix, vocab: int):
+    import jax
+
+    out = []
+    for i, (plen, gen) in enumerate(mix):
+        ids = np.asarray(jax.random.randint(
+            jax.random.fold_in(jax.random.PRNGKey(1234), i), (plen,),
+            0, vocab), np.int32)
+        out.append((ids, gen))
+    return out
+
+
+def _engine_stats(model, params, requests, *, max_batch=8, prefill_chunk=16,
+                  page_size=16):
+    """Warm run (compile both tick widths) then a timed run on the same
+    engine instance — the jitted mixed step is per-engine, so reuse keeps
+    compile time out of the measurement."""
+    from repro.serve.engine import EngineConfig, ServeEngine
+
+    max_seq = max(len(p) + g for p, g in requests)
+    eng = ServeEngine(model, params,
+                      EngineConfig(max_batch=max_batch,
+                                   prefill_chunk=prefill_chunk,
+                                   page_size=page_size, max_seq_len=max_seq))
+    eng.run(requests)                       # warm-up: compiles + first pass
+    runs = [eng.run(requests)["stats"] for _ in range(2)]
+    return max(runs, key=lambda s: s["tok_s"])   # best-of-2: shave OS noise
+
+
+def _sequential_tok_s(model, params, requests):
+    """Single-request baseline: the same requests served one at a time
+    through persistent jitted prefill/decode (compile excluded — shapes are
+    warmed before timing)."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.serve.step import make_decode_step
+
+    prefill = jax.jit(model.prefill)
+    decode = jax.jit(make_decode_step(model))
+
+    def one(ids, gen):
+        cache = model.init_cache(1, len(ids) + gen)
+        logits, cache = prefill(params, jnp.asarray(ids)[None, :], cache)
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)
+        for t in range(len(ids), len(ids) + gen - 1):
+            tok, _, cache = decode(params, tok[:, None], cache, jnp.int32(t))
+        return tok
+
+    for ids, gen in requests:               # warm every (shape) variant
+        jax.block_until_ready(one(ids, gen))
+    best = float("inf")
+    for _ in range(2):                      # best-of-2: shave OS noise
+        t0 = time.perf_counter()
+        for ids, gen in requests:
+            jax.block_until_ready(one(ids, gen))
+        best = min(best, time.perf_counter() - t0)
+    return sum(g for _, g in requests) / best
+
+
+def run():
+    import jax
+
+    from repro.models.model_zoo import build
+    from repro.sparse.compress import (CompressionPlan, compress_params,
+                                       prune_blocks_for_plan,
+                                       quantize_compressed)
+
+    model = build("smollm-360m", reduced=True)
+    params = model.init(jax.random.PRNGKey(0))
+    plan = CompressionPlan(block=(8, 64), min_sparsity=0.5)
+    pruned = prune_blocks_for_plan(params, plan, 0.85)
+    cp = compress_params(pruned, plan)
+    formats = {"dense": pruned, "bcsr": cp,
+               "palette8": quantize_compressed(cp, bits=8)}
+    # dense only on one mix (it is the reference point, not the product)
+    cells = [(mix, fmt) for mix in MIXES for fmt in ("bcsr", "palette8")]
+    cells.append(("mixed_len", "dense"))
+
+    rows = []
+    for mix_name, fmt in cells:
+        requests = _requests(MIXES[mix_name], model.cfg.vocab)
+        p = formats[fmt]
+        s = _engine_stats(model, p, requests)
+        seq_tok_s = _sequential_tok_s(model, p, requests)
+        rows.append({
+            "name": f"serve_engine/{mix_name}_{fmt}",
+            "us_per_call": 1e6 / max(s["tok_s"], 1e-9),
+            "derived": (f"engine_tok_s={s['tok_s']:.1f},"
+                        f"seq_tok_s={seq_tok_s:.1f},"
+                        f"batch_speedup={s['tok_s']/max(seq_tok_s,1e-9):.2f}x,"
+                        f"ttft_p50_ms={s['ttft_p50_s']*1e3:.1f},"
+                        f"ttft_p95_ms={s['ttft_p95_s']*1e3:.1f},"
+                        f"lat_p50_ms={s['latency_p50_s']*1e3:.1f},"
+                        f"lat_p95_ms={s['latency_p95_s']*1e3:.1f},"
+                        f"n_ticks={s['n_ticks']},"
+                        f"n_prefill_chunks={s['n_prefill_chunks']}")})
+    return rows
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default="",
+                    help="write the rows to this path (BENCH json schema; "
+                         "CI uploads it alongside BENCH_pr.json)")
+    ap.add_argument("--assert-speedup", action="store_true",
+                    help="exit nonzero unless the batched compressed engine "
+                         "beats sequential compressed serving (aggregate "
+                         "tokens/s) on every decode-dominated compressed "
+                         "cell (prefill_heavy is reported but not gated: "
+                         "a one-shot sequential prefill is a single big "
+                         "dispatch and legitimately wins on CPU)")
+    ap.add_argument("--assert-from", default="",
+                    help="apply --assert-speedup to rows loaded from this "
+                         "previously written --json file instead of "
+                         "re-running the benchmark — lets CI upload the "
+                         "artifact first and gate afterwards, so a failed "
+                         "gate still leaves the numbers to diagnose")
+    args = ap.parse_args(argv)
+    if args.assert_from:
+        with open(args.assert_from) as f:
+            rows = json.load(f)["rows"]
+        args.assert_speedup = True
+    else:
+        rows = run()
+        for r in rows:
+            print(r)
+        if args.json:
+            with open(args.json, "w") as f:
+                json.dump({"rows": rows}, f, indent=1)
+            print(f"wrote {args.json}")
+    if args.assert_speedup:
+        import re
+
+        bad = [r["name"] for r in rows
+               if "dense" not in r["name"]
+               and "prefill_heavy" not in r["name"]
+               and float(re.search(r"batch_speedup=([0-9.]+)x",
+                                   r["derived"]).group(1)) <= 1.0]
+        if bad:
+            print(f"FAIL: batched engine did not beat sequential serving "
+                  f"on {bad}")
+            return 1
+        print("batched compressed engine > sequential on every "
+              "decode-dominated compressed cell")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -266,7 +266,8 @@ class Checkpointer:
                 quantize_bits=spec.get("quantize_bits"),
                 quantize_overrides=tuple(
                     (s, int(b))
-                    for s, b in spec.get("quantize_overrides", ())))
+                    for s, b in spec.get("quantize_overrides", ())),
+                slot_multiple=spec.get("slot_multiple"))
         cp = CompressedParams(dense=roots["dense"], sparse=roots["sparse"],
                               plan=plan)
         if mesh is not None:

@@ -110,6 +110,33 @@ def main(argv=None):
                          "path — the CI sharded-vs-single-host parity gate "
                          "compares these to 1e-4")
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--top-k", type=int, default=0,
+                    help="top-k truncation when sampling (0 = off)")
+    ap.add_argument("--top-p", type=float, default=1.0,
+                    help="nucleus (top-p) filtering when sampling (1 = off)")
+    ap.add_argument("--engine", action="store_true",
+                    help="serve through the continuous-batching engine "
+                         "(serve/engine.py): paged KV cache, chunked "
+                         "prefill, FCFS scheduler over a fixed-capacity "
+                         "slot batch — many concurrent mixed-length "
+                         "requests instead of one fixed batch")
+    ap.add_argument("--max-batch", type=int, default=8,
+                    help="engine slot capacity (concurrent requests)")
+    ap.add_argument("--prefill-chunk", type=int, default=32,
+                    help="prompt tokens consumed per slot per engine tick; "
+                         "prompts longer than this prefill across ticks, "
+                         "interleaved with running decodes")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="KV page length (tokens) of the paged cache")
+    ap.add_argument("--requests", default="",
+                    help="JSON request mix for --engine: a list of "
+                         '{"prompt_len": N, "gen": M} (random prompt) or '
+                         '{"prompt": [ids], "gen": M} entries; default is '
+                         "--batch copies of --prompt-len/--gen")
+    ap.add_argument("--parity-check", action="store_true",
+                    help="with --engine (greedy): also run every request "
+                         "through the sequential generate() path and fail "
+                         "on any per-token mismatch")
     args = ap.parse_args(argv)
     if args.quantize_bits and (not args.sparse or args.ckpt_dir):
         raise SystemExit(
@@ -153,7 +180,12 @@ def main(argv=None):
         params = model.init(key)
         plan = CompressionPlan(
             block=tuple(args.block), min_sparsity=args.min_block_sparsity,
-            quantize_bits=args.quantize_bits or None)
+            quantize_bits=args.quantize_bits or None,
+            # pack slot counts so the block store divides the mesh axes and
+            # shards (instead of silently replicating on odd slot counts)
+            slot_multiple=(int(np.lcm.reduce(
+                [int(s) for s in mesh.shape.values()]))
+                if mesh is not None else None))
         params = prune_blocks_for_plan(params, plan, args.sparsity)
         dense_b = model_size_bytes(params, sparse=False)
         params = compress_params(params, plan)   # PaletteBCSR when quantizing
@@ -176,14 +208,83 @@ def main(argv=None):
             np.save(args.logits_out,
                     np.asarray(jax.device_get(logits)).astype(np.float32))
             print(f"prefill logits -> {args.logits_out}")
+        if args.engine:
+            return _run_engine(model, params, args)
         t0 = time.perf_counter()
         out = generate(model, params, prompt, args.gen,
                        temperature=args.temperature,
-                       rng=jax.random.PRNGKey(1))
+                       rng=jax.random.PRNGKey(1),
+                       top_k=args.top_k, top_p=args.top_p)
         dt = time.perf_counter() - t0
     print(f"generated {out.shape} in {dt:.2f}s "
           f"({args.batch * args.gen / dt:.1f} tok/s)")
     print("sample:", out[0, :16].tolist())
+    return out
+
+
+def _load_requests(args, vocab: int) -> list[tuple[np.ndarray, int]]:
+    """(prompt ids, gen) pairs for the engine from --requests JSON (or the
+    --batch/--prompt-len/--gen defaults). Random prompts are seeded per
+    request index so the mix is reproducible."""
+    import json
+
+    if args.requests:
+        with open(args.requests) as f:
+            spec = json.load(f)
+    else:
+        spec = [{"prompt_len": args.prompt_len, "gen": args.gen}
+                for _ in range(args.batch)]
+    out = []
+    for i, e in enumerate(spec):
+        gen = int(e.get("gen", args.gen))
+        if "prompt" in e:
+            ids = np.asarray(e["prompt"], np.int32)
+        else:
+            ids = np.asarray(jax.random.randint(
+                jax.random.fold_in(jax.random.PRNGKey(1234), i),
+                (int(e["prompt_len"]),), 0, vocab), np.int32)
+        out.append((ids, gen))
+    return out
+
+
+def _run_engine(model, params, args):
+    """The --engine path: continuous batching over the paged KV cache."""
+    from repro.serve.engine import EngineConfig, ServeEngine
+
+    requests = _load_requests(args, model.cfg.vocab)
+    max_seq = max(len(p) + g for p, g in requests)
+    engine = ServeEngine(
+        model, params,
+        EngineConfig(max_batch=args.max_batch,
+                     prefill_chunk=args.prefill_chunk,
+                     page_size=args.page_size, max_seq_len=max_seq,
+                     temperature=args.temperature, top_k=args.top_k,
+                     top_p=args.top_p),
+        rng=jax.random.PRNGKey(1))
+    out = engine.run(requests)
+    s = out["stats"]
+    print(f"engine: {s['n_requests']} requests "
+          f"({s['n_prompt']} prompt + {s['n_generated']} new tokens) in "
+          f"{s['wall_s']:.2f}s = {s['tok_s']:.1f} tok/s | "
+          f"ttft p50/p95 {s['ttft_p50_s']*1e3:.0f}/{s['ttft_p95_s']*1e3:.0f}ms"
+          f" | latency p50/p95 {s['latency_p50_s']*1e3:.0f}/"
+          f"{s['latency_p95_s']*1e3:.0f}ms | {s['n_ticks']} ticks, "
+          f"{s['n_prefill_chunks']} prefill chunks")
+    print("sample:", out["results"][0][:16].tolist())
+    if args.parity_check:
+        if args.temperature > 0:
+            raise SystemExit("--parity-check needs greedy decoding "
+                             "(--temperature 0): generate() and the engine "
+                             "draw from different rng streams")
+        for rid, (ids, gen) in enumerate(requests):
+            ref = np.asarray(generate(model, params, ids[None, :], gen))[0]
+            got = out["results"][rid]
+            if not np.array_equal(ref, got):
+                raise SystemExit(
+                    f"engine-vs-generate token mismatch for request {rid} "
+                    f"(prompt_len={len(ids)}): {got.tolist()} != "
+                    f"{ref.tolist()}")
+        print(f"engine-vs-generate parity OK ({len(requests)} requests)")
     return out
 
 

@@ -338,3 +338,83 @@ def prefill_attention(p: dict, x: Array, cache: dict, positions: Array,
     y = _out_proj(p, out, x.dtype, sparse)
     new_cache = _write_prefill_cache(cache, k, v, cfg)
     return shard_ann(y, ("batch", "seq", "embed")), new_cache
+
+
+# ---------------------------------------------------------------------------
+# Paged attention (continuous-batching engine — serve/paged_kv.py)
+# ---------------------------------------------------------------------------
+
+def init_paged_kv(cfg: ModelConfig, n_pages: int, page_size: int,
+                  dtype) -> dict:
+    """Per-layer block-paged KV pool: K/V stored as (n_pages, page_size, kv,
+    hd) pages shared by every request slot. Page 0 is the engine's trash
+    page — never allocated to a request, so masked-out token writes can
+    land there harmlessly. Slot-to-page ownership lives in the engine's
+    page table, not here."""
+    if cfg.kv_cache_dtype == "int8":
+        raise NotImplementedError(
+            "paged KV pools store the compute dtype; the int8 paged cache "
+            "is not implemented (use the ring cache for int8 configs)")
+    kv, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+    return {"k": jnp.zeros((n_pages, page_size, kv, hd), dtype),
+            "v": jnp.zeros((n_pages, page_size, kv, hd), dtype)}
+
+
+def paged_attention(p: dict, x: Array, cache: dict, page_table: Array,
+                    positions: Array, n_tokens: Array, cfg: ModelConfig,
+                    sparse: Optional[dict] = None) -> tuple[Array, dict]:
+    """Mixed prefill/decode attention against a block-paged KV pool.
+
+    x: (B, C, d) — B engine slots, up to C new tokens each; slot i carries
+    ``n_tokens[i]`` valid tokens at absolute positions ``positions[i, :]``
+    (decode slots have 1 valid token, prefill slots a chunk, inactive slots
+    0). cache: {"k", "v"} (n_pages, page_size, kv, hd) pools; page_table:
+    (B, P) physical page of each slot's logical page p (covering positions
+    [p*page_size, (p+1)*page_size)), 0 for unallocated entries.
+
+    The new K/V are scattered into each slot's pages first, then every
+    query attends over its slot's gathered pages under a causal-by-absolute-
+    position mask — so one dispatch serves any mix of prefill chunks and
+    single-token decodes (the engine's mixed step). Invalid queries read
+    finite garbage that is discarded downstream; causality guarantees they
+    never contaminate a valid position.
+    """
+    b, c = x.shape[0], x.shape[1]
+    ps = cache["k"].shape[1]
+    q, k_new, v_new = _project_qkv(p, x, cfg, positions, sparse)
+
+    valid = jnp.arange(c, dtype=jnp.int32)[None, :] < n_tokens[:, None]
+    logical = jnp.clip(positions // ps, 0, page_table.shape[1] - 1)
+    phys = jnp.take_along_axis(page_table, logical, axis=1)     # (B, C)
+    phys = jnp.where(valid, phys, 0)                            # trash page
+    offs = positions % ps
+    new_cache = {}
+    for name, new in (("k", k_new), ("v", v_new)):
+        pool = cache[name]
+        flat = new.reshape(b * c, *new.shape[2:]).astype(pool.dtype)
+        new_cache[name] = pool.at[phys.reshape(-1),
+                                  offs.reshape(-1)].set(flat)
+
+    P = page_table.shape[1]
+    k_ctx = new_cache["k"][page_table].reshape(b, P * ps, *k_new.shape[2:])
+    v_ctx = new_cache["v"][page_table].reshape(b, P * ps, *v_new.shape[2:])
+    k_ctx = shard_ann(k_ctx, ("batch", "cache_seq", "kv_heads", "head_dim"))
+    v_ctx = shard_ann(v_ctx, ("batch", "cache_seq", "kv_heads", "head_dim"))
+
+    h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    g = h // kv
+    qg = q.reshape(b, c, kv, g, hd)
+    s = jnp.einsum("bqkgh,bckh->bkgqc", qg, k_ctx,
+                   preferred_element_type=jnp.float32) * hd ** -0.5
+    k_pos = jnp.arange(P * ps, dtype=jnp.int32)
+    mask = k_pos[None, None, :] <= positions[:, :, None]        # (B, C, K)
+    if cfg.attn_window is not None:
+        mask &= (positions[:, :, None] - k_pos[None, None, :]) < cfg.attn_window
+    s = jnp.where(mask[:, None, None, :, :], s, NEG_INF)
+
+    pattn = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgqc,bckh->bkgqh", pattn, v_ctx.astype(jnp.float32),
+                     preferred_element_type=jnp.float32)
+    out = out.transpose(0, 3, 1, 2, 4).reshape(b, c, h, hd).astype(x.dtype)
+    y = _out_proj(p, out, x.dtype, sparse)
+    return shard_ann(y, ("batch", "seq", "embed")), new_cache

@@ -182,6 +182,32 @@ def _apply_layer_prefill(p: dict, x: Array, cfg: ModelConfig, kind: str,
     return x + f, new_cache
 
 
+def _apply_layer_paged(p: dict, x: Array, cfg: ModelConfig, kind: str,
+                       cache: dict, page_table: Array, positions: Array,
+                       n_tokens: Array, sp: Optional[dict] = None
+                       ) -> tuple[Array, dict]:
+    """Mixed prefill/decode layer against a block-paged KV pool (the
+    continuous-batching engine path). Attention-only: recurrent mixers keep
+    per-slot O(1) state and use the slotted decode path instead."""
+    if kind != "attn":
+        raise NotImplementedError(
+            f"paged engine step supports attention layers only, got {kind!r}")
+    sp = sp or {}
+    h = apply_norm(p["pre_norm"], x, cfg.norm)
+    new_cache = dict(cache)
+    mix, new_cache["attn"] = attention.paged_attention(
+        p["attn"], h, cache["attn"], page_table, positions, n_tokens, cfg,
+        sparse=sp.get("attn"))
+    x = x + mix
+    h = apply_norm(p["ffn_norm"], x, cfg.norm)
+    if cfg.moe is not None:
+        f, _ = moe_lib.apply_moe(p["moe"], h, cfg, sparse=sp.get("moe"))
+    else:
+        f = apply_mlp(p["mlp"], h, cfg.act, cfg.mlp_gated,
+                      sparse_weights=sp.get("mlp"))
+    return x + f, new_cache
+
+
 def _init_layer_cache(cfg: ModelConfig, kind: str, batch: int, seq_len: int,
                       dtype) -> dict:
     if kind == "attn":
@@ -247,6 +273,20 @@ def _super_prefill(p: dict, x: Array, cfg: ModelConfig, cache: dict,
     return x, new_cache
 
 
+def _super_paged(p: dict, x: Array, cfg: ModelConfig, cache: dict,
+                 page_table: Array, positions: Array, n_tokens: Array,
+                 sp: Optional[dict] = None):
+    sp = sp or {}
+    new_cache = {}
+    for i, kind in enumerate(cfg.block_pattern):
+        key = f"b{i}_{kind}"
+        x, new_cache[key] = _apply_layer_paged(p[key], x, cfg, kind,
+                                               cache[key], page_table,
+                                               positions, n_tokens,
+                                               sp.get(key))
+    return x, new_cache
+
+
 # ---------------------------------------------------------------------------
 # Whole model
 # ---------------------------------------------------------------------------
@@ -264,6 +304,11 @@ class Model:
     decode_step: Callable       # (params, x, cache, pos) -> (logits, cache)
     prefill: Callable           # (params, prompt, cache) -> (logits, cache)
     init_cache: Callable        # (batch, seq_len, dtype) -> cache
+    # (params, tokens, pools, page_table, start_pos, n_tokens)
+    #   -> (last-valid-token logits, pools) — the continuous-batching
+    # engine's mixed step (serve/engine.py). None for architectures the
+    # paged path doesn't cover (recurrent mixers, int8 KV cache).
+    paged_step: Optional[Callable] = None
 
 
 def make_model(cfg: ModelConfig, remat: bool = True,
@@ -412,7 +457,48 @@ def make_model(cfg: ModelConfig, remat: bool = True,
                     positions, sp_rem.get(key))
         return head(params, x[:, -1:])[:, 0], new_cache
 
+    def paged_step(params, tokens, pools, page_table, start_pos, n_tokens
+                   ) -> tuple[Array, PyTree]:
+        """Continuous-batching mixed step over a fixed-capacity slot batch.
+
+        tokens: (B, C) ids — up to C new tokens per slot (decode slots carry
+        1, prefill slots a chunk, inactive slots 0 — see ``n_tokens``);
+        pools: paged KV tree from ``serve.paged_kv.init_paged_cache``;
+        page_table: (B, P) int32; start_pos/n_tokens: (B,) int32. Returns
+        (logits at each slot's LAST valid token (B, vocab), new pools) —
+        one jit dispatch serves any prefill/decode mix per engine tick.
+        """
+        dense, sparse = _split_params(params)
+        sp_layers = (sparse or {}).get("layers", {})
+        sp_rem = (sparse or {}).get("rem", {})
+        x = embed_inputs(dense, tokens)
+        b, c = x.shape[0], x.shape[1]
+        positions = start_pos[:, None] + jnp.arange(c, dtype=jnp.int32)[None]
+
+        def body(x, xs):
+            layer_p, layer_c, layer_sp = xs
+            x2, c2 = _super_paged(layer_p, x, cfg, layer_c, page_table,
+                                  positions, n_tokens, layer_sp)
+            return x2, c2
+
+        x, new_layer_pools = jax.lax.scan(
+            body, x, (dense["layers"], pools["layers"], sp_layers))
+        new_pools = {"layers": new_layer_pools}
+        if rem:
+            new_pools["rem"] = {}
+            for i, kind in enumerate(rem):
+                key = f"r{i}_{kind}"
+                x, new_pools["rem"][key] = _apply_layer_paged(
+                    dense["rem"][key], x, cfg, kind, pools["rem"][key],
+                    page_table, positions, n_tokens, sp_rem.get(key))
+        last = jnp.clip(n_tokens - 1, 0, c - 1)
+        xl = jnp.take_along_axis(x, last[:, None, None], axis=1)   # (B, 1, d)
+        return head(params, xl)[:, 0], new_pools
+
+    paged_ok = (all(k == "attn" for k in cfg.block_pattern)
+                and cfg.kv_cache_dtype != "int8")
     return Model(cfg=cfg, init=init, apply_train=apply_train,
                  apply_hidden=apply_hidden, head=head,
                  decode_step=decode_step, prefill=prefill,
-                 init_cache=init_cache)
+                 init_cache=init_cache,
+                 paged_step=paged_step if paged_ok else None)

@@ -1,0 +1,184 @@
+"""Continuous-batching serving engine over compressed (or dense) weights.
+
+``ServeEngine`` serves many concurrent, mixed-length requests from a single
+fixed-capacity slot batch: each tick runs **one jitted mixed step**
+(``Model.paged_step``) over all slots — any mix of prefill chunks and
+single-token decodes, inactive slots masked by ``n_tokens == 0`` — then a
+pluggable sampler, then host-side bookkeeping (admission, streaming
+callbacks, slot recycling). ``params`` may be a raw tree or
+``CompressedParams`` (BlockCSR / PaletteBCSR, sharded or not): the mixed
+step dispatches the same ``sparse_matmul`` kernels as the sequential
+serving path, so the engine is compression- and sharding-transparent.
+
+Because the scheduler emits exactly two tick widths (1 and
+``prefill_chunk``), the step compiles twice and then never again — request
+churn only changes array *contents*. KV lives in the block-paged pools of
+``serve/paged_kv.py``; pools are donated back to the step each tick, so
+the cache is updated in place where the backend supports donation.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.transformer import Model
+from repro.serve.paged_kv import PageAllocator, init_paged_cache, pages_for
+from repro.serve.scheduler import Request, Scheduler
+from repro.serve.step import make_sampler
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    """Knobs of the continuous-batching engine.
+
+    max_batch:     fixed slot capacity of the jitted mixed step.
+    prefill_chunk: prompt tokens consumed per slot per tick (long prompts
+                   prefill across many ticks, interleaved with decode).
+    page_size:     KV page length in tokens.
+    max_seq_len:   per-request context cap (prompt + generated) — sets the
+                   page-table width.
+    n_pages:       total pages per layer pool; default sizes every slot for
+                   ``max_seq_len`` (+1 for the reserved trash page 0).
+    token_budget:  max tokens scheduled per tick (decode first, remainder
+                   to prefill chunks); default ``max_batch + prefill_chunk``.
+    """
+    max_batch: int = 8
+    prefill_chunk: int = 32
+    page_size: int = 16
+    max_seq_len: int = 256
+    n_pages: Optional[int] = None
+    token_budget: Optional[int] = None
+    temperature: float = 0.0
+    top_k: int = 0
+    top_p: float = 1.0
+
+    @property
+    def pages_per_slot(self) -> int:
+        return pages_for(self.max_seq_len, self.page_size)
+
+    @property
+    def total_pages(self) -> int:
+        return (self.n_pages if self.n_pages is not None
+                else self.max_batch * self.pages_per_slot + 1)
+
+
+class ServeEngine:
+    """The step loop. ``sampler(logits, rng) -> tokens`` runs inside the
+    jitted step; default is built from the config's temperature/top-k/top-p
+    via ``serve.step.make_sampler`` (greedy when temperature == 0)."""
+
+    def __init__(self, model: Model, params, config: EngineConfig,
+                 sampler: Optional[Callable] = None, rng=None):
+        if model.paged_step is None:
+            raise NotImplementedError(
+                f"{model.cfg.name}: paged engine needs an attention-only "
+                "architecture with a non-int8 KV cache")
+        self.model = model
+        self.params = params
+        self.config = config
+        self.pools = init_paged_cache(model, config.total_pages,
+                                      config.page_size)
+        self.allocator = PageAllocator(config.total_pages)
+        self.scheduler = Scheduler(
+            capacity=config.max_batch, prefill_chunk=config.prefill_chunk,
+            allocator=self.allocator, page_size=config.page_size,
+            max_pages=config.pages_per_slot,
+            token_budget=config.token_budget)
+        sampler = sampler or make_sampler(config.temperature, config.top_k,
+                                          config.top_p)
+        self._rng = rng if rng is not None else jax.random.PRNGKey(0)
+        self._next_rid = 0
+        self.n_ticks = 0
+
+        def _step(params, pools, tokens, page_table, start_pos, n_tokens,
+                  rng):
+            logits, pools = model.paged_step(params, tokens, pools,
+                                             page_table, start_pos, n_tokens)
+            return sampler(logits, rng), logits, pools
+
+        # donate the pools: the KV pages update in place instead of
+        # copying the whole pool every tick (no-op on backends without
+        # donation support)
+        self._step = jax.jit(_step, donate_argnums=(1,))
+
+    # -- request intake -----------------------------------------------------
+
+    def submit(self, prompt, max_new_tokens: int, eos_id: Optional[int] = None,
+               stream: Optional[Callable] = None) -> int:
+        """Queue one request; returns its rid. ``stream(rid, token, done)``
+        is invoked for every generated token as it is produced."""
+        rid = self._next_rid
+        self._next_rid += 1
+        req = Request(rid=rid, prompt=np.asarray(prompt, np.int32).ravel(),
+                      max_new_tokens=int(max_new_tokens), eos_id=eos_id,
+                      stream=stream)
+        self.scheduler.add(req, now=time.perf_counter())
+        return rid
+
+    # -- the step loop ------------------------------------------------------
+
+    def step(self) -> list[dict]:
+        """Run one tick; returns the requests that finished during it."""
+        plan = self.scheduler.next_tick(now=time.perf_counter())
+        if plan is None:
+            return []
+        self._rng, sub = jax.random.split(self._rng)
+        sampled, _, self.pools = self._step(
+            self.params, self.pools, jnp.asarray(plan.tokens),
+            jnp.asarray(self.scheduler.page_table()),
+            jnp.asarray(plan.start_pos), jnp.asarray(plan.n_tokens), sub)
+        self.n_ticks += 1
+        return self.scheduler.complete_tick(plan, np.asarray(sampled),
+                                            now=time.perf_counter())
+
+    def run(self, requests=None) -> dict:
+        """Serve until the queue drains. ``requests``: optional iterable of
+        ``(prompt, max_new_tokens)`` tuples or ``Request``-like dicts to
+        submit first. Returns ``{"results": {rid: tokens}, "stats": ...}``."""
+        for r in (requests or []):
+            if isinstance(r, dict):
+                self.submit(**r)
+            else:
+                self.submit(*r)
+        t0 = time.perf_counter()
+        ticks0 = self.n_ticks
+        chunks0 = self.scheduler.n_prefill_chunks
+        tokens0 = self.scheduler.n_scheduled_tokens
+        finished: list[dict] = []
+        while self.scheduler.has_work():
+            finished.extend(self.step())
+        wall = time.perf_counter() - t0
+        stats = self._stats(finished, wall)
+        # per-run counters (the engine object is reusable across runs)
+        stats["n_ticks"] = self.n_ticks - ticks0
+        stats["n_prefill_chunks"] = \
+            self.scheduler.n_prefill_chunks - chunks0
+        stats["n_scheduled_tokens"] = \
+            self.scheduler.n_scheduled_tokens - tokens0
+        return {"results": {r["rid"]: r["tokens"] for r in finished},
+                "stats": stats}
+
+    def _stats(self, finished: list[dict], wall: float) -> dict:
+        """Throughput/latency summary of a drained run."""
+        n_new = sum(r["n_generated"] for r in finished)
+        ttft = [r["t_first"] - r["t_submit"] for r in finished
+                if r["t_first"] is not None]
+        lat = [r["t_done"] - r["t_submit"] for r in finished]
+
+        def pct(xs, q):
+            return float(np.percentile(xs, q)) if xs else 0.0
+
+        return {
+            "n_requests": len(finished),
+            "n_generated": int(n_new),
+            "n_prompt": int(sum(r["n_prompt"] for r in finished)),
+            "wall_s": wall,
+            "tok_s": n_new / wall if wall > 0 else 0.0,
+            "ttft_p50_s": pct(ttft, 50), "ttft_p95_s": pct(ttft, 95),
+            "latency_p50_s": pct(lat, 50), "latency_p95_s": pct(lat, 95),
+        }

@@ -1,0 +1,112 @@
+"""Block-paged KV cache for the continuous-batching serving engine.
+
+The one-ring-per-batch cache (``Model.init_cache``) allocates a dense
+``(batch, seq_len, ...)`` buffer per layer: every request pays for the
+longest request's context, and a finished request's memory can't be reused
+without reallocating (= recompiling) the whole batch. The engine instead
+stores KV in fixed-size **pages** — per layer, a pool of
+``(n_pages, page_size, kv_heads, head_dim)`` K and V pages shared by every
+request slot — and maps each request's logical context onto physical pages
+through a per-slot **page table** ``(capacity, max_pages)``: logical page
+``p`` of a slot covers absolute positions ``[p*page_size, (p+1)*page_size)``.
+
+Allocation is host-side (a free list — pages are ints, allocation never
+enters the jitted step); the jitted step only consumes the page table, so
+admitting, finishing, and recycling requests changes *data*, never shapes:
+no recompiles as traffic churns. Page 0 is reserved as the trash page —
+masked-out token writes land there, and unallocated page-table entries
+point at it (their reads are masked by the causal-by-absolute-position
+mask in ``models.attention.paged_attention``).
+
+The pool tree mirrors ``Model.init_cache``'s structure (scanned layers
+stacked over ``n_super``, unrolled remainder under ``rem``) so it rides
+through the same layer-stack ``lax.scan``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention
+from repro.models.transformer import Model
+
+
+def pages_for(n_tokens: int, page_size: int) -> int:
+    """Number of pages covering a context of ``n_tokens`` positions."""
+    return -(-int(n_tokens) // int(page_size))
+
+
+def init_paged_cache(model: Model, n_pages: int, page_size: int,
+                     dtype=None):
+    """Paged KV pool pytree for an attention-only model.
+
+    Mirrors ``Model.init_cache``'s tree (``{"layers": stacked, "rem": ...}``)
+    with each attention layer's ring buffer replaced by a
+    ``(n_pages, page_size, kv, hd)`` page pool. One page table indexes every
+    layer's pool identically (all layers cache the same positions), so the
+    engine allocates pages once per request, not per layer.
+    """
+    cfg = model.cfg
+    if model.paged_step is None:
+        raise NotImplementedError(
+            f"{cfg.name}: the paged engine covers attention-only "
+            "architectures with a non-int8 KV cache "
+            f"(block_pattern={cfg.block_pattern}, "
+            f"kv_cache_dtype={cfg.kv_cache_dtype!r})")
+    dtype = dtype or jnp.dtype(cfg.compute_dtype)
+
+    def one_super():
+        return {f"b{i}_{kind}": {"attn": attention.init_paged_kv(
+                    cfg, n_pages, page_size, dtype)}
+                for i, kind in enumerate(cfg.block_pattern)}
+
+    stacked = jax.tree.map(
+        lambda x: jnp.broadcast_to(x, (cfg.n_super_blocks,) + x.shape).copy(),
+        one_super())
+    pools = {"layers": stacked}
+    rem = cfg.remainder_pattern
+    if rem:
+        pools["rem"] = {f"r{i}_{kind}": {"attn": attention.init_paged_kv(
+                            cfg, n_pages, page_size, dtype)}
+                        for i, kind in enumerate(rem)}
+    return pools
+
+
+def paged_cache_bytes(pools) -> int:
+    """Total bytes of the page pools (all layers)."""
+    return sum(int(x.size) * x.dtype.itemsize for x in jax.tree.leaves(pools))
+
+
+class PageAllocator:
+    """Host-side free-list page allocator. Page 0 is reserved (trash page).
+
+    ``alloc(n)`` pops ``n`` page ids (lowest-numbered first — keeps page
+    tables dense and reproducible) or raises ``MemoryError`` without
+    allocating anything; ``free(pages)`` returns them. The engine reserves
+    a request's worst-case page count at admission, so a running request
+    can never hit an out-of-pages condition mid-flight (no preemption
+    needed).
+    """
+
+    def __init__(self, n_pages: int):
+        if n_pages < 2:
+            raise ValueError(f"need >= 2 pages (page 0 is reserved), "
+                             f"got {n_pages}")
+        self.n_pages = int(n_pages)
+        # descending so .pop() hands out the lowest id first
+        self._free = list(range(self.n_pages - 1, 0, -1))
+
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    def alloc(self, n: int) -> list[int]:
+        if n > len(self._free):
+            raise MemoryError(f"requested {n} pages, {len(self._free)} free")
+        return [self._free.pop() for _ in range(n)]
+
+    def free(self, pages) -> None:
+        for p in pages:
+            p = int(p)
+            assert 0 < p < self.n_pages, p
+            self._free.append(p)

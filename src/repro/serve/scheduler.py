@@ -1,0 +1,236 @@
+"""Request scheduler for the continuous-batching engine: FCFS admission
+under a token budget, chunked prefill interleaved with decode, slot
+recycling on EOS/max-len.
+
+Scheduling is entirely host-side and shape-stable: every tick produces a
+``TickPlan`` whose arrays are ``(capacity, width)`` with ``width`` either 1
+(pure-decode tick) or ``prefill_chunk`` (a tick that advances at least one
+prompt) — so the engine's jitted mixed step compiles exactly twice and the
+request mix only changes *data*.
+
+The tick rules:
+
+* **Admission** is FCFS. A waiting request is admitted when a slot is free
+  and its worst-case page count (``pages_for(prompt + max_new)``) can be
+  reserved up front — so a running request can never run out of pages
+  mid-flight and no preemption is ever needed.
+* **Decode first.** Every running slot in the decode phase gets its 1 token
+  each tick, off the top of the token budget — new prompts never stall
+  running requests.
+* **Chunked prefill** spends the remaining budget: prompts are consumed in
+  chunks of up to ``prefill_chunk`` tokens, FCFS by admission order, so a
+  32k prompt prefills across many ticks while decode slots keep streaming.
+* **Slot recycling**: a request finishes on EOS or ``max_new_tokens``; its
+  pages return to the free list and its slot is immediately re-admittable.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Callable, Optional
+
+import numpy as np
+
+from repro.serve.paged_kv import PageAllocator, pages_for
+
+
+@dataclasses.dataclass
+class Request:
+    """One serving request. ``prompt`` is a 1D int32 token array;
+    ``stream`` (optional) is called as ``stream(rid, token, done)`` for
+    every generated token — the engine's per-request streaming callback."""
+    rid: int
+    prompt: np.ndarray
+    max_new_tokens: int
+    eos_id: Optional[int] = None
+    stream: Optional[Callable] = None
+
+
+@dataclasses.dataclass
+class _Slot:
+    """Serving state of one admitted request (one engine slot)."""
+    req: Request
+    pages: list
+    n_prefilled: int = 0
+    generated: Optional[list] = None
+    t_submit: float = 0.0
+    t_admit: float = 0.0
+    t_first: Optional[float] = None
+
+    def __post_init__(self):
+        if self.generated is None:
+            self.generated = []
+
+    @property
+    def prompt_done(self) -> bool:
+        return self.n_prefilled >= len(self.req.prompt)
+
+    @property
+    def ctx_len(self) -> int:
+        """Positions written to the KV cache so far."""
+        return self.n_prefilled + max(len(self.generated) - 1, 0)
+
+
+@dataclasses.dataclass
+class TickPlan:
+    """One tick's shape-stable batch: (capacity, width) tokens plus per-slot
+    start positions / valid-token counts (0 = inactive slot)."""
+    width: int
+    tokens: np.ndarray       # (capacity, width) int32
+    start_pos: np.ndarray    # (capacity,) int32
+    n_tokens: np.ndarray     # (capacity,) int32
+    samples: list = dataclasses.field(default_factory=list)
+    # slots whose sampled token must be consumed this tick (finished a
+    # prompt, or in decode phase); mid-prefill slots ignore the sample
+
+
+class Scheduler:
+    def __init__(self, capacity: int, prefill_chunk: int,
+                 allocator: PageAllocator, page_size: int, max_pages: int,
+                 token_budget: Optional[int] = None):
+        if prefill_chunk < 1:
+            raise ValueError(f"prefill_chunk must be >= 1, {prefill_chunk}")
+        self.capacity = int(capacity)
+        self.prefill_chunk = int(prefill_chunk)
+        self.allocator = allocator
+        self.page_size = int(page_size)
+        self.max_pages = int(max_pages)
+        # default: every slot can decode AND one full chunk can prefill
+        self.token_budget = int(token_budget or (capacity + prefill_chunk))
+        if self.token_budget < max(capacity, prefill_chunk):
+            raise ValueError(
+                f"token_budget {self.token_budget} < "
+                f"max(capacity={capacity}, prefill_chunk={prefill_chunk}) "
+                "would starve decode or deadlock prefill")
+        self.waiting: deque[tuple[Request, float]] = deque()
+        self.slots: list[Optional[_Slot]] = [None] * self.capacity
+        self.n_prefill_chunks = 0          # chunks actually scheduled
+        self.n_scheduled_tokens = 0
+
+    # -- admission ----------------------------------------------------------
+
+    def add(self, req: Request, now: float = 0.0) -> None:
+        if len(req.prompt) < 1 or req.max_new_tokens < 1:
+            raise ValueError(f"request {req.rid}: need a non-empty prompt "
+                             "and max_new_tokens >= 1")
+        need = pages_for(len(req.prompt) + req.max_new_tokens,
+                         self.page_size)
+        if need > self.max_pages or need > self.allocator.n_pages - 1:
+            raise ValueError(
+                f"request {req.rid} needs {need} pages "
+                f"(prompt {len(req.prompt)} + max_new {req.max_new_tokens}) "
+                f"but the engine caps at {self.max_pages} pages/slot and "
+                f"{self.allocator.n_pages - 1} total")
+        self.waiting.append((req, now))
+
+    def _admit(self, now: float) -> None:
+        for i in range(self.capacity):
+            if not self.waiting:
+                return
+            if self.slots[i] is not None:
+                continue
+            req, t_submit = self.waiting[0]
+            need = pages_for(len(req.prompt) + req.max_new_tokens,
+                             self.page_size)
+            if need > self.allocator.n_free:
+                return                      # FCFS: don't admit around the head
+            self.waiting.popleft()
+            self.slots[i] = _Slot(req=req,
+                                  pages=self.allocator.alloc(need),
+                                  t_submit=t_submit, t_admit=now)
+
+    # -- tick construction --------------------------------------------------
+
+    def has_work(self) -> bool:
+        return bool(self.waiting) or any(s is not None for s in self.slots)
+
+    def page_table(self) -> np.ndarray:
+        table = np.zeros((self.capacity, self.max_pages), np.int32)
+        for i, s in enumerate(self.slots):
+            if s is not None:
+                table[i, :len(s.pages)] = s.pages
+        return table
+
+    def next_tick(self, now: float = 0.0) -> Optional[TickPlan]:
+        """Admit waiting requests, then plan one tick. None = idle."""
+        self._admit(now)
+        active = [(i, s) for i, s in enumerate(self.slots) if s is not None]
+        if not active:
+            return None
+        budget = self.token_budget
+        decode = [(i, s) for i, s in enumerate(self.slots)
+                  if s is not None and s.prompt_done]
+        prefill = [(i, s) for i, s in enumerate(self.slots)
+                   if s is not None and not s.prompt_done]
+        budget -= len(decode)               # decode never stalls
+        grants: list[tuple[int, _Slot, int]] = []
+        for i, s in prefill:                # FCFS by slot admission
+            c = min(self.prefill_chunk,
+                    len(s.req.prompt) - s.n_prefilled, max(budget, 0))
+            grants.append((i, s, c))
+            budget -= c
+        width = self.prefill_chunk if any(c > 0 for _, _, c in grants) else 1
+
+        tokens = np.zeros((self.capacity, width), np.int32)
+        start = np.zeros(self.capacity, np.int32)
+        n_tok = np.zeros(self.capacity, np.int32)
+        samples = []
+        for i, s in decode:
+            tokens[i, 0] = s.generated[-1]
+            start[i] = s.ctx_len
+            n_tok[i] = 1
+            samples.append(i)
+        for i, s, c in grants:
+            if c <= 0:
+                continue                    # budget-deferred this tick
+            tokens[i, :c] = s.req.prompt[s.n_prefilled:s.n_prefilled + c]
+            start[i] = s.n_prefilled
+            n_tok[i] = c
+            self.n_prefill_chunks += 1
+            if s.n_prefilled + c >= len(s.req.prompt):
+                samples.append(i)           # prompt completes: sample now
+        self.n_scheduled_tokens += int(n_tok.sum())
+        return TickPlan(width=width, tokens=tokens, start_pos=start,
+                        n_tokens=n_tok, samples=samples)
+
+    # -- tick completion ----------------------------------------------------
+
+    def complete_tick(self, plan: TickPlan, sampled: np.ndarray,
+                      now: float = 0.0) -> list[dict]:
+        """Feed back the sampled tokens; returns records of requests that
+        finished this tick (their slots and pages are already recycled).
+        The scheduler retains nothing about finished requests — the caller
+        owns the records, so a long-lived engine stays O(capacity)."""
+        finished: list[dict] = []
+        for i in range(self.capacity):
+            s = self.slots[i]
+            if s is None or plan.n_tokens[i] == 0:
+                continue
+            if not s.prompt_done:
+                s.n_prefilled += int(plan.n_tokens[i])
+            if i not in plan.samples:
+                continue                    # mid-prefill: ignore the sample
+            tok = int(sampled[i])
+            if s.t_first is None:
+                s.t_first = now
+            s.generated.append(tok)
+            done = (len(s.generated) >= s.req.max_new_tokens
+                    or (s.req.eos_id is not None and tok == s.req.eos_id))
+            if s.req.stream is not None:
+                s.req.stream(s.req.rid, tok, done)
+            if done:
+                finished.append(self._finish(i, now))
+        return finished
+
+    def _finish(self, i: int, now: float) -> dict:
+        s = self.slots[i]
+        self.allocator.free(s.pages)
+        self.slots[i] = None
+        return {
+            "rid": s.req.rid,
+            "tokens": np.asarray(s.generated, np.int32),
+            "n_prompt": len(s.req.prompt),
+            "n_generated": len(s.generated),
+            "t_submit": s.t_submit, "t_admit": s.t_admit,
+            "t_first": s.t_first, "t_done": now,
+        }

@@ -20,13 +20,58 @@ import jax.numpy as jnp
 from repro.models.transformer import Model
 
 
-def sample_token(logits, temperature: float = 0.0, rng=None):
-    """logits (B, vocab) -> token ids (B,) int32 (greedy or sampled)."""
-    if temperature > 0.0 and rng is not None:
-        tok = jax.random.categorical(rng, logits / temperature, axis=-1)
-    else:
-        tok = jnp.argmax(logits, axis=-1)
-    return tok.astype(jnp.int32)
+def _top_k_mask(logits, top_k: int):
+    """Keep the top-k logits, set the rest to -inf. Ties at the k-th value
+    all survive (standard top-k semantics)."""
+    kth = jax.lax.top_k(logits, top_k)[0][..., -1:]
+    return jnp.where(logits >= kth, logits, -jnp.inf)
+
+
+def _top_p_mask(logits, top_p: float):
+    """Nucleus filter: keep the smallest set of tokens whose cumulative
+    probability reaches ``top_p`` (always at least the argmax — the
+    exclusive cumsum of the most-probable token is 0 < top_p)."""
+    sort_idx = jnp.argsort(-logits, axis=-1)
+    sorted_logits = jnp.take_along_axis(logits, sort_idx, axis=-1)
+    probs = jax.nn.softmax(sorted_logits, axis=-1)
+    cum_before = jnp.cumsum(probs, axis=-1) - probs    # exclusive cumsum
+    drop_sorted = cum_before >= top_p
+    # un-sort the drop mask back to vocabulary order (inverse permutation)
+    inv = jnp.argsort(sort_idx, axis=-1)
+    drop = jnp.take_along_axis(drop_sorted, inv, axis=-1)
+    return jnp.where(drop, -jnp.inf, logits)
+
+
+def sample_token(logits, temperature: float = 0.0, rng=None,
+                 top_k: int = 0, top_p: float = 1.0):
+    """logits (B, vocab) -> token ids (B,) int32.
+
+    temperature == 0 (or no rng): greedy argmax. Otherwise sample from
+    ``softmax(logits / temperature)`` after optional top-k truncation
+    (``top_k > 0``) and nucleus / top-p filtering (``top_p < 1``); both
+    filters applied means top-k first, then top-p over the survivors —
+    filters run on the temperature-scaled logits. jit-safe for static
+    ``top_k`` / ``top_p`` (close over them via ``make_sampler``).
+    """
+    if temperature <= 0.0 or rng is None:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    scaled = logits / temperature
+    if top_k and top_k > 0:
+        scaled = _top_k_mask(scaled, int(top_k))
+    if top_p < 1.0:
+        scaled = _top_p_mask(scaled, float(top_p))
+    return jax.random.categorical(rng, scaled, axis=-1).astype(jnp.int32)
+
+
+def make_sampler(temperature: float = 0.0, top_k: int = 0,
+                 top_p: float = 1.0) -> Callable:
+    """Pluggable sampler factory for the serving engine: returns
+    ``sampler(logits, rng) -> (B,) int32`` with the sampling knobs closed
+    over (so the returned callable is shape-only and jit-stable)."""
+    def sampler(logits, rng=None):
+        return sample_token(logits, temperature, rng, top_k=top_k,
+                            top_p=top_p)
+    return sampler
 
 
 def make_prefill_step(model: Model) -> Callable:
@@ -39,25 +84,28 @@ def make_prefill_step(model: Model) -> Callable:
     return prefill_step
 
 
-def make_decode_step(model: Model, temperature: float = 0.0) -> Callable:
+def make_decode_step(model: Model, temperature: float = 0.0,
+                     top_k: int = 0, top_p: float = 1.0) -> Callable:
     def decode_step(params, inputs, cache, pos, rng=None):
         """inputs: (B, 1) ids (or (B, 1, d) frontend embeddings)."""
         logits, cache = model.decode_step(params, inputs, cache, pos)
         logits = logits[:, 0]
-        tok = sample_token(logits, temperature, rng)
+        tok = sample_token(logits, temperature, rng, top_k=top_k,
+                           top_p=top_p)
         return tok, logits, cache
     return decode_step
 
 
 def generate(model: Model, params, prompt, steps: int,
-             temperature: float = 0.0, rng=None):
+             temperature: float = 0.0, rng=None,
+             top_k: int = 0, top_p: float = 1.0):
     """Batched greedy/sampled generation: one prefill dispatch for the whole
     prompt (``model.prefill`` fills the KV cache in a single forward),
     then the decode loop — instead of O(prompt_len) stepwise jit dispatches."""
     b, s = prompt.shape
     cache = model.init_cache(b, s + steps)
     prefill = jax.jit(model.prefill)
-    decode = jax.jit(make_decode_step(model, temperature))
+    decode = jax.jit(make_decode_step(model, temperature, top_k, top_p))
 
     def next_key():
         nonlocal rng
@@ -67,7 +115,8 @@ def generate(model: Model, params, prompt, steps: int,
         return sub
 
     logits, cache = prefill(params, prompt, cache)
-    tok = sample_token(logits, temperature, next_key())
+    tok = sample_token(logits, temperature, next_key(), top_k=top_k,
+                       top_p=top_p)
     out = [tok]
     for t in range(s, s + steps - 1):
         tok, logits, cache = decode(params, out[-1][:, None], cache,

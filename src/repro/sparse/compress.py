@@ -91,6 +91,15 @@ class CompressionPlan:
                   emits ``PaletteBCSR`` leaves the runtime serves directly.
     quantize_overrides: ((path_substring, bits), ...) per-layer bit widths;
                   first match wins, bits 0 keeps that layer fp.
+    slot_multiple: pad every BCSR slot count (pad slot 0 included) up to a
+                  multiple of this, so the block store's slot axis divides a
+                  mesh axis and shards instead of silently replicating
+                  (small models easily land on odd slot counts). None =
+                  auto: the lcm of the active mesh's axis sizes when
+                  ``compress_params`` runs under ``use_mesh`` (or the
+                  explicit value the launchers pass from ``--mesh``),
+                  1 otherwise. Padding slots are zero blocks — output- and
+                  gradient-invariant (``pad_bcsr``).
     """
     block: tuple[int, int] = (8, 128)
     min_sparsity: float = 0.5
@@ -98,6 +107,7 @@ class CompressionPlan:
     overrides: tuple = ()
     quantize_bits: Optional[int] = None
     quantize_overrides: tuple = ()
+    slot_multiple: Optional[int] = None
 
     def block_for(self, path: str) -> tuple[int, int]:
         for sub, blk in self.overrides:
@@ -238,6 +248,19 @@ def _walk_targets(params: PyTree, handle) -> PyTree:
 # Compression
 # ---------------------------------------------------------------------------
 
+def _resolve_slot_multiple(plan: CompressionPlan) -> int:
+    """Slot-axis packing multiple: the plan's explicit value, else the lcm
+    of the ambient mesh's axis sizes (any axis the per-path row rule maps
+    to then divides the slot count), else 1 (no packing)."""
+    if plan.slot_multiple is not None:
+        return max(int(plan.slot_multiple), 1)
+    from repro.distributed.sharding import current_mesh
+    mesh = current_mesh()
+    if mesh is None:
+        return 1
+    return int(np.lcm.reduce([int(s) for s in mesh.shape.values()]))
+
+
 def _try_compress(arr: np.ndarray, path: str, plan: CompressionPlan,
                   n_stack: int) -> Optional[BlockCSR]:
     """``n_stack`` leading axes of ``arr`` are stack axes (scanned layers
@@ -261,6 +284,8 @@ def _try_compress(arr: np.ndarray, path: str, plan: CompressionPlan,
     # hazard is gradient flow to pad slots, which bsr_sddmm masks via
     # slot_coordinates' validity vector.
     n_slots = max(m.data.shape[0] for m in ms)
+    mult = _resolve_slot_multiple(plan)
+    n_slots = -(-n_slots // mult) * mult     # mesh-divisible slot packing
     jmax = max(m.gather_idx.shape[1] for m in ms)
     jmax_t = max(m.gather_t_idx.shape[1] for m in ms)
     ms = [pad_bcsr(m, n_slots, jmax, jmax_t) for m in ms]

@@ -1,0 +1,102 @@
+"""serve/step.py sampling (greedy / temperature / top-k / top-p) and
+serve/kvcache.py helpers (cache_spec no-allocation property, cache_bytes
+arithmetic)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.model_zoo import build
+from repro.serve.kvcache import cache_bytes, cache_spec
+from repro.serve.step import make_sampler, sample_token
+
+# one peaked + tail distribution: probs 0.5, 0.3, 0.15, 0.05
+LOGITS = jnp.log(jnp.asarray([[0.5, 0.3, 0.15, 0.05]]))
+
+
+def _draws(n=300, **kw):
+    keys = jax.random.split(jax.random.PRNGKey(0), n)
+    toks = jax.vmap(lambda k: sample_token(LOGITS, 1.0, k, **kw))(keys)
+    return np.asarray(toks).ravel()
+
+
+def test_greedy_is_argmax():
+    logits = jnp.asarray([[0.1, 3.0, -1.0], [9.0, 0.0, 1.0]])
+    np.testing.assert_array_equal(sample_token(logits), [1, 0])
+    # no rng means greedy even with temperature set
+    np.testing.assert_array_equal(sample_token(logits, 0.7), [1, 0])
+    assert sample_token(logits).dtype == jnp.int32
+
+
+def test_temperature_sampling_covers_support():
+    toks = _draws()
+    assert set(np.unique(toks)) == {0, 1, 2, 3}       # full support at T=1
+    # near-zero temperature concentrates on the argmax
+    keys = jax.random.split(jax.random.PRNGKey(1), 50)
+    cold = jax.vmap(lambda k: sample_token(LOGITS, 0.05, k))(keys)
+    assert set(np.unique(np.asarray(cold))) == {0}
+
+
+def test_top_k_restricts_support():
+    toks = _draws(top_k=2)
+    assert set(np.unique(toks)) <= {0, 1}
+    assert len(set(np.unique(toks))) == 2             # both survivors drawn
+    # top_k=1 is greedy regardless of rng
+    assert set(np.unique(_draws(n=50, top_k=1))) == {0}
+
+
+def test_top_p_restricts_support():
+    # top_p=0.7: exclusive cumprobs are 0 / 0.5 / 0.8 -> keep {0, 1}
+    toks = _draws(top_p=0.7)
+    assert set(np.unique(toks)) <= {0, 1}
+    assert len(set(np.unique(toks))) == 2
+    # a tiny top_p always keeps the argmax (never an empty support)
+    assert set(np.unique(_draws(n=50, top_p=1e-6))) == {0}
+    # top_p=1.0 is a no-op: full support
+    assert set(np.unique(_draws(top_p=1.0))) == {0, 1, 2, 3}
+
+
+def test_top_k_and_top_p_compose():
+    # top_k=3 keeps {0,1,2}; then top_p=0.7 over the survivors
+    # (renormalized probs ~0.526/0.316/0.158 -> exclusive cum 0/.526/.842)
+    toks = _draws(top_k=3, top_p=0.7)
+    assert set(np.unique(toks)) <= {0, 1}
+
+
+def test_make_sampler_is_jit_stable():
+    sampler = make_sampler(temperature=1.0, top_k=2)
+    jitted = jax.jit(sampler)
+    tok = jitted(LOGITS, jax.random.PRNGKey(3))
+    assert int(tok[0]) in (0, 1)
+    greedy = jax.jit(make_sampler())                  # no-rng greedy path
+    np.testing.assert_array_equal(greedy(LOGITS), [0])
+
+
+# ---------------------------------------------------------------------------
+# serve/kvcache.py helpers
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def model():
+    return build("smollm-360m", reduced=True)
+
+
+def test_cache_spec_allocates_nothing_and_matches_init_cache(model):
+    spec = cache_spec(model, batch=2, seq_len=16)
+    leaves = jax.tree.leaves(spec)
+    assert leaves and all(isinstance(l, jax.ShapeDtypeStruct)
+                          for l in leaves)            # no arrays materialized
+    real = model.init_cache(2, 16)
+    real_shapes = jax.tree.map(lambda x: (x.shape, x.dtype), real)
+    spec_shapes = jax.tree.map(lambda x: (x.shape, x.dtype), spec)
+    assert real_shapes == spec_shapes
+
+
+def test_cache_bytes_arithmetic(model):
+    spec = cache_spec(model, batch=2, seq_len=16)
+    expect = sum(int(np.prod(l.shape)) * l.dtype.itemsize
+                 for l in jax.tree.leaves(spec))
+    assert cache_bytes(spec) == expect
+    # bytes scale linearly in batch and seq for the attention ring cache
+    assert cache_bytes(cache_spec(model, 4, 16)) == 2 * expect
+    assert cache_bytes(cache_spec(model, 2, 32)) == 2 * expect

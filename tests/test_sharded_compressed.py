@@ -138,6 +138,37 @@ def test_nondividing_slot_count_replicates():
     assert tuple(spec)[0] == "model", spec
 
 
+def test_slot_multiple_packs_nondividing_layout_for_sharding():
+    """plan.slot_multiple pads the slot axis to a mesh-divisible count, so a
+    layout that previously replicated (odd slots on a model=2 axis) now
+    shards — and the padded store is still value-identical."""
+    import dataclasses
+
+    w = _sparse_w(rows=6)                    # 7 slots: replicates on model=2
+    plan = dataclasses.replace(PLAN, slot_multiple=4)
+    cp = compress_params({"head": jnp.asarray(w.T)}, plan)   # stored (d, V)
+    m = cp.sparse["head"]
+    assert m.data.shape[0] == 8, m.data.shape
+    spec = shd._bcsr_row_spec("['head']", np.asarray(m.data), _FakeMesh(),
+                              shd.PARAM_RULES)
+    assert tuple(spec)[0] == "model", spec
+    # padding slots are zero blocks: the densified matrix is unchanged
+    np.testing.assert_array_equal(np.asarray(m.to_dense()), w)
+
+
+def test_slot_multiple_auto_resolves_from_active_mesh():
+    """slot_multiple=None auto-packs to the lcm of the ambient mesh's axis
+    sizes when compression runs under use_mesh (the SpC-Retrain pipeline
+    compresses inside the mesh context), and stays a no-op without one."""
+    w = _sparse_w(rows=6)                    # 7 slots unpacked
+    cp = compress_params({"head": jnp.asarray(w.T)}, PLAN)
+    assert cp.sparse["head"].data.shape[0] == 7
+    with shd.use_mesh(_FakeMesh()):          # lcm(2, 2) = 2 -> pack to 8
+        cp = compress_params({"head": jnp.asarray(w.T)}, PLAN)
+    assert cp.sparse["head"].data.shape[0] == 8
+    np.testing.assert_array_equal(np.asarray(cp.sparse["head"].to_dense()), w)
+
+
 def test_split_trainable_preserves_shardings():
     model = build("smollm-360m", reduced=True)
     params = model.init(jax.random.PRNGKey(0))
