@@ -1,27 +1,36 @@
-"""Tier-2 bench regression gate: compressed-decode tokens/s vs baseline.
+"""Tier-2 bench regression gate: serve + kernel lanes in one invocation.
 
-CI runs ``benchmarks.inference_speedup --json BENCH_pr.json`` on every run,
-uploads the JSON as an artifact, and then runs this script: the build FAILS
-if the whole-model compressed (BCSR) decode throughput regressed more than
-``--max-regress`` (default 20%) against the committed
-``benchmarks/BENCH_baseline.json``.
+CI runs ``benchmarks.inference_speedup --json BENCH_pr.json`` and
+``benchmarks.kernel_bench --json BENCH_kernels.json`` on every run, uploads
+the JSONs as artifacts, and then runs this script once over the (report,
+baseline) pairs: the build FAILS if any gated metric regressed more than
+``--max-regress`` against its committed baseline.
 
-Absolute tokens/s are machine-dependent (the committed baseline was not
-necessarily produced on the same runner class), so the default gate is
-**machine-corrected**: it compares the compressed-decode throughput
-normalized by the *same run's* dense-decode throughput
-(``bcsr_tok_s / dense_tok_s``) against the baseline's normalized value. A
-slower/noisier runner slows dense and compressed alike and cancels out; a
-real compressed-path regression (kernel dispatch, extra copies, a lost
-fusion) shows up as the ratio dropping. Pass ``--absolute`` to gate on raw
-tokens/s instead — only meaningful when baseline and run share a machine
-class. After a legitimate perf change, regenerate the baseline:
+Gated metrics, extracted per report:
+
+* ``inference_speedup/decode_dense_vs_compressed`` — whole-model
+  compressed (BCSR) decode throughput, gated on the machine-corrected
+  ``bcsr_tok_s / dense_tok_s`` ratio (``--absolute`` gates raw tok/s
+  instead — only meaningful when baseline and run share a machine class),
+* any row carrying ``speedup_vs_dense=`` in its derived field (the kernel
+  lane) — already a same-run ratio against dense XLA, machine-corrected
+  by construction.
+
+Absolute numbers are machine-dependent (the committed baselines were not
+necessarily produced on the same runner class); ratios against the same
+run's dense path cancel runner speed out, so a drop means a real
+compressed-path regression (kernel dispatch, extra copies, a lost fusion).
+A metric present in a PR report but missing from its baseline is skipped
+with a warning, not a crash — re-baseline with ``--update`` to start
+gating it. After a legitimate perf change, regenerate and commit:
 
     PYTHONPATH=src python -m benchmarks.inference_speedup --steps 60 \
         --json /tmp/BENCH_pr.json
-    python -m benchmarks.check_regression /tmp/BENCH_pr.json --update
-
-and commit the result.
+    PYTHONPATH=src python -m benchmarks.kernel_bench \
+        --json /tmp/BENCH_kernels.json
+    python -m benchmarks.check_regression /tmp/BENCH_pr.json \
+        /tmp/BENCH_kernels.json --baseline benchmarks/BENCH_baseline.json \
+        benchmarks/BENCH_kernels_baseline.json --update
 """
 from __future__ import annotations
 
@@ -35,83 +44,105 @@ BASELINE = "benchmarks/BENCH_baseline.json"
 DECODE_ROW = "inference_speedup/decode_dense_vs_compressed"
 
 
-def _field(derived: str, name: str, required: bool = True):
+def _field(derived: str, name: str):
     m = re.search(rf"{name}=([0-9.]+)", derived)
-    if not m:
-        if required:
-            raise SystemExit(f"no {name} in {derived!r}")
-        return None
-    return float(m.group(1))
+    return float(m.group(1)) if m else None
 
 
-def decode_stats(report: dict, required: bool = True):
-    """(bcsr_tok_s, dense_tok_s) from a bench JSON report.
+def gated_metrics(report: dict, absolute: bool = False) -> dict:
+    """name -> (gated value, display string) for every gateable row.
 
-    ``required=False`` (the baseline side) returns None instead of failing
-    when the row or a metric key is absent — a metric that exists in the PR
-    report but not yet in the committed baseline is skipped with a warning,
-    not a crash, so adding new bench metrics doesn't break the gate on
-    their first run (re-baseline with --update to start gating them)."""
-    for row in report["rows"]:
+    The decode row gates on the machine-corrected bcsr/dense ratio (or raw
+    tok/s under ``absolute``); any other row gates on its
+    ``speedup_vs_dense`` derived field (already a same-run ratio). Rows
+    without a gateable metric are ignored.
+    """
+    out = {}
+    for row in report.get("rows", []):
+        derived = row.get("derived", "")
         if row["name"] == DECODE_ROW:
-            bcsr = _field(row["derived"], "bcsr_tok_s", required)
-            dense = _field(row["derived"], "dense_tok_s", required)
+            bcsr = _field(derived, "bcsr_tok_s")
+            dense = _field(derived, "dense_tok_s")
             if bcsr is None or dense is None:
-                return None
-            return (bcsr, dense)
-    if required:
-        raise SystemExit(f"row {DECODE_ROW!r} missing from report")
-    return None
+                continue
+            ratio = bcsr / max(dense, 1e-9)
+            if absolute:
+                out[row["name"]] = (bcsr, f"{bcsr:.1f} tok/s "
+                                          f"({ratio:.3f}x dense)")
+            else:
+                out[row["name"]] = (ratio, f"{ratio:.3f}x dense "
+                                           f"({bcsr:.1f} tok/s)")
+        else:
+            v = _field(derived, "speedup_vs_dense")
+            if v is not None:
+                out[row["name"]] = (v, f"{v:.3f}x dense")
+    return out
 
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
-    ap.add_argument("report", help="BENCH_pr.json from inference_speedup "
-                                   "--json")
-    ap.add_argument("--baseline", default=BASELINE)
-    ap.add_argument("--max-regress", type=float, default=0.20,
-                    help="fail if compressed-decode throughput drops more "
-                         "than this fraction below the baseline")
+    ap.add_argument("report", nargs="+",
+                    help="bench JSON report(s): BENCH_pr.json from "
+                         "inference_speedup --json, BENCH_kernels.json "
+                         "from kernel_bench --json, ...")
+    ap.add_argument("--baseline", nargs="+", default=None,
+                    help="committed baseline(s), matched to the reports by "
+                         f"position (default: {BASELINE})")
+    ap.add_argument("--max-regress", type=float, nargs="+", default=[0.20],
+                    help="fail if a gated metric drops more than this "
+                         "fraction below its baseline; one value for all "
+                         "pairs or one per (report, baseline) pair")
     ap.add_argument("--absolute", action="store_true",
-                    help="gate on raw tokens/s instead of the machine-"
-                         "corrected (bcsr/dense) ratio — requires baseline "
-                         "and run to share a machine class")
+                    help="gate the decode row on raw tokens/s instead of "
+                         "the machine-corrected (bcsr/dense) ratio — "
+                         "requires baseline and run to share a machine "
+                         "class")
     ap.add_argument("--update", action="store_true",
-                    help="copy the report over the baseline instead of "
+                    help="copy each report over its baseline instead of "
                          "gating (commit the result)")
     args = ap.parse_args(argv)
 
+    baselines = args.baseline or [BASELINE]
+    if len(baselines) != len(args.report):
+        raise SystemExit(f"{len(args.report)} report(s) but "
+                         f"{len(baselines)} baseline(s) — pass one "
+                         "--baseline per report, in order")
+    regress = args.max_regress
+    if len(regress) == 1:
+        regress = regress * len(args.report)
+    if len(regress) != len(args.report):
+        raise SystemExit(f"{len(args.report)} report(s) but {len(regress)} "
+                         "--max-regress value(s)")
+
     if args.update:
-        shutil.copy(args.report, args.baseline)
-        print(f"baseline updated: {args.baseline}")
+        for report, baseline in zip(args.report, baselines):
+            shutil.copy(report, baseline)
+            print(f"baseline updated: {baseline}")
         return 0
 
-    with open(args.report) as f:
-        pr_bcsr, pr_dense = decode_stats(json.load(f))
-    with open(args.baseline) as f:
-        base = decode_stats(json.load(f), required=False)
-    if base is None:
-        print(f"WARNING: {DECODE_ROW!r} metrics present in {args.report} "
-              f"but missing from baseline {args.baseline} — skipping the "
-              "gate for this metric (run with --update and commit the "
-              "result to start gating it)")
-        return 0
-    base_bcsr, base_dense = base
-
-    if args.absolute:
-        metric, base_metric, unit = pr_bcsr, base_bcsr, "tok/s"
-    else:
-        metric = pr_bcsr / max(pr_dense, 1e-9)
-        base_metric = base_bcsr / max(base_dense, 1e-9)
-        unit = "x dense"
-    floor = base_metric * (1.0 - args.max_regress)
-    verdict = "OK" if metric >= floor else "REGRESSION"
-    print(f"compressed decode: {pr_bcsr:.1f} tok/s "
-          f"({pr_bcsr / max(pr_dense, 1e-9):.3f}x dense) vs baseline "
-          f"{base_bcsr:.1f} ({base_bcsr / max(base_dense, 1e-9):.3f}x) — "
-          f"gated metric {metric:.3f} {unit}, floor {floor:.3f} "
-          f"-> {verdict}")
-    return 0 if metric >= floor else 1
+    failed = False
+    for report, baseline, mr in zip(args.report, baselines, regress):
+        with open(report) as f:
+            pr = gated_metrics(json.load(f), args.absolute)
+        if not pr:
+            raise SystemExit(f"no gateable metrics in {report} — wrong "
+                             "file, or every row lost its derived fields?")
+        with open(baseline) as f:
+            base = gated_metrics(json.load(f), args.absolute)
+        for name, (value, disp) in pr.items():
+            if name not in base:
+                print(f"WARNING: {name!r} present in {report} but missing "
+                      f"from baseline {baseline} — skipping the gate for "
+                      "this metric (run with --update and commit the "
+                      "result to start gating it)")
+                continue
+            base_value, base_disp = base[name]
+            floor = base_value * (1.0 - mr)
+            ok = value >= floor
+            failed |= not ok
+            print(f"{name}: {disp} vs baseline {base_disp} — "
+                  f"floor {floor:.3f} -> {'OK' if ok else 'REGRESSION'}")
+    return 1 if failed else 0
 
 
 if __name__ == "__main__":

@@ -1,3 +1,31 @@
 # Pallas TPU kernels for the paper's compute hot spots:
-#   bsr_spmm  - dense x BlockCSR gather-block-matmul (paper Figs. 2-3)
-#   prox_adam - fused optimizer + soft-threshold update (paper Fig. 4)
+#   bsr_spmm        - dense x BlockCSR gather-block-matmul (paper Figs. 2-3)
+#   bsr_sddmm       - masked weight gradient at resident BCSR slots
+#   flash_attention - online-softmax attention forward
+#   paged_attention - page-table gather fused with flash-decode attention
+#   prox_adam       - fused optimizer + soft-threshold update (paper Fig. 4)
+from __future__ import annotations
+
+import os
+
+import jax
+
+_FALSY = ("0", "false", "no", "off")
+
+
+def use_interpret() -> bool:
+    """Single point of truth for Pallas interpret-mode selection.
+
+    Every ``kernels/*/ops.py`` wrapper resolves ``interpret=None`` through
+    here: compiled (Mosaic) on TPU, interpret mode everywhere else, so
+    flipping the whole kernel suite to compiled is the backend switch — not
+    five per-package edits. ``REPRO_PALLAS_INTERPRET=1`` forces interpret
+    mode on TPU (kernel debugging); ``REPRO_PALLAS_INTERPRET=0`` asserts
+    compiled mode. Resolution happens at trace time: the jitted wrappers
+    keep ``interpret=None`` as their static cache key, so set the env var
+    before the first kernel call in a process.
+    """
+    env = os.environ.get("REPRO_PALLAS_INTERPRET", "").strip().lower()
+    if env:
+        return env not in _FALSY
+    return jax.default_backend() != "tpu"

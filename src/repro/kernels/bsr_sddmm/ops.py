@@ -13,9 +13,8 @@ import jax.numpy as jnp
 
 from repro.kernels.bsr_sddmm.bsr_sddmm import sddmm_block_grad
 from repro.kernels.bsr_sddmm import ref as ref_lib
+from repro.kernels import use_interpret
 from repro.sparse.formats import BlockCSR, PaletteBCSR
-
-_INTERPRET = True   # CPU container default
 
 
 def _reject_palette(w):
@@ -59,7 +58,7 @@ def bsr_weight_grad(x, dy, w: BlockCSR, *, bm: int = 128,
 
     Returns (n_slots, br, bc) f32 gradient blocks for w.data."""
     _reject_palette(w)
-    interpret = _INTERPRET if interpret is None else interpret
+    interpret = use_interpret() if interpret is None else interpret
     br, bc = w.block
     m = x.shape[0]
     pad = (-m) % bm

@@ -16,9 +16,8 @@ import jax.numpy as jnp
 from repro.kernels.bsr_spmm.bsr_spmm import (gather_block_matmul,
                                              gather_block_matmul_palette)
 from repro.kernels.bsr_spmm import ref as ref_lib
+from repro.kernels import use_interpret
 from repro.sparse.formats import BlockCSR, PaletteBCSR
-
-_INTERPRET = True  # CPU container: validate in interpret mode (TPU: False)
 
 
 def _pad_rows(x, bm):
@@ -32,7 +31,7 @@ def _pad_rows(x, bm):
 @functools.partial(jax.jit, static_argnames=("bm", "interpret"))
 def spmm(x, w: BlockCSR, *, bm: int = 128, interpret: bool | None = None):
     """Y (M, N) = X (M, K) @ W' for W (N, K) BlockCSR."""
-    interpret = _INTERPRET if interpret is None else interpret
+    interpret = use_interpret() if interpret is None else interpret
     n, k = w.shape
     xp, m = _pad_rows(x, bm)
     k_pad = w.block_grid[1] * w.block[1]
@@ -47,7 +46,7 @@ def spmm(x, w: BlockCSR, *, bm: int = 128, interpret: bool | None = None):
 @functools.partial(jax.jit, static_argnames=("bm", "interpret"))
 def spmm_t(dy, w: BlockCSR, *, bm: int = 128, interpret: bool | None = None):
     """dX (M, K) = dY (M, N) @ W for W (N, K) BlockCSR (backward)."""
-    interpret = _INTERPRET if interpret is None else interpret
+    interpret = use_interpret() if interpret is None else interpret
     n, k = w.shape
     dyp, m = _pad_rows(dy, bm)
     # pad N up to the block grid (gather tables index padded block rows)
@@ -67,7 +66,7 @@ def spmm_palette(x, w: PaletteBCSR, *, bm: int = 128,
     """Y (M, N) = X (M, K) @ W' for W (N, K) PaletteBCSR — the quantized
     serving forward. Dequantization (palette lookup, nibble unpack at 4-bit)
     is fused into the gather-block-matmul kernel."""
-    interpret = _INTERPRET if interpret is None else interpret
+    interpret = use_interpret() if interpret is None else interpret
     n, k = w.shape
     xp, m = _pad_rows(x, bm)
     k_pad = w.block_grid[1] * w.block[1]

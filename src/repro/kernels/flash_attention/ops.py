@@ -14,9 +14,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.flash_attention.flash_attention import flash_attention_fwd
+from repro.kernels import use_interpret
 from repro.kernels.flash_attention import ref as ref_lib
-
-_INTERPRET = True   # CPU container default
 
 
 @functools.partial(jax.jit,
@@ -25,7 +24,7 @@ _INTERPRET = True   # CPU container default
 def flash_attention(q, k, v, *, causal=True, window=None, bq=128, bk=128,
                     interpret=None):
     """q: (B, S, H, hd); k, v: (B, S, KV, hd) -> (B, S, H, hd)."""
-    interpret = _INTERPRET if interpret is None else interpret
+    interpret = use_interpret() if interpret is None else interpret
     b, s, h, hd = q.shape
     kv = k.shape[2]
     bq = min(bq, s)

@@ -14,9 +14,8 @@ import jax.numpy as jnp
 
 from repro.core.prox import default_regularized_predicate
 from repro.kernels.prox_adam.prox_adam import fused_prox_update
+from repro.kernels import use_interpret
 from repro.kernels.prox_adam import ref as ref_lib
-
-_INTERPRET = True  # CPU container default
 _LANES = 128
 
 
@@ -40,7 +39,7 @@ def _from_tiles(t, n, shape, dtype):
                    static_argnames=("rule", "apply_prox", "bm", "interpret"))
 def fused_update_leaf(w, g, m, v, scalars, *, rule="adam", apply_prox=True,
                       bm=256, interpret=None):
-    interpret = _INTERPRET if interpret is None else interpret
+    interpret = use_interpret() if interpret is None else interpret
     wt, n = _to_tiles(w, bm)
     gt, _ = _to_tiles(g.astype(jnp.float32), bm)
     mt, _ = _to_tiles(m, bm)

@@ -128,6 +128,19 @@ def main(argv=None):
                          "interleaved with running decodes")
     ap.add_argument("--page-size", type=int, default=16,
                     help="KV page length (tokens) of the paged cache")
+    ap.add_argument("--first-chunk", type=int, default=0,
+                    help="jumbo width for the FIRST prefill chunk of a "
+                         "long prompt (> --prefill-chunk; 0 = off) — a "
+                         "third compiled tick width that cuts TTFT")
+    ap.add_argument("--attn-backend", default="auto",
+                    choices=["auto", "pallas", "ref"],
+                    help="paged-attention kernel for the engine step: "
+                         "'pallas' = fused page-gather flash-decode kernel "
+                         "(interpret mode off-TPU), 'ref' = jnp gather "
+                         "oracle, 'auto' = pallas on TPU, ref elsewhere")
+    ap.add_argument("--kv-splits", type=int, default=1,
+                    help="flash-decode KV-split lanes per slot on the "
+                         "pallas backend")
     ap.add_argument("--requests", default="",
                     help="JSON request mix for --engine: a list of "
                          '{"prompt_len": N, "gen": M} (random prompt) or '
@@ -258,6 +271,9 @@ def _run_engine(model, params, args):
         EngineConfig(max_batch=args.max_batch,
                      prefill_chunk=args.prefill_chunk,
                      page_size=args.page_size, max_seq_len=max_seq,
+                     first_chunk=args.first_chunk or None,
+                     attn_backend=args.attn_backend,
+                     kv_splits=args.kv_splits,
                      temperature=args.temperature, top_k=args.top_k,
                      top_p=args.top_p),
         rng=jax.random.PRNGKey(1))

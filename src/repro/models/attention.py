@@ -28,6 +28,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.distributed.sharding import shard_ann
+from repro.kernels.paged_attention import ops as paged_kops
 from repro.models.layers import apply_norm, apply_rope, init_norm, truncated_normal_init
 from repro.sparse import ops as sparse_ops
 
@@ -362,7 +363,9 @@ def init_paged_kv(cfg: ModelConfig, n_pages: int, page_size: int,
 
 def paged_attention(p: dict, x: Array, cache: dict, page_table: Array,
                     positions: Array, n_tokens: Array, cfg: ModelConfig,
-                    sparse: Optional[dict] = None) -> tuple[Array, dict]:
+                    sparse: Optional[dict] = None,
+                    backend: Optional[str] = None,
+                    kv_splits: int = 1) -> tuple[Array, dict]:
     """Mixed prefill/decode attention against a block-paged KV pool.
 
     x: (B, C, d) — B engine slots, up to C new tokens each; slot i carries
@@ -373,11 +376,19 @@ def paged_attention(p: dict, x: Array, cache: dict, page_table: Array,
     [p*page_size, (p+1)*page_size)), 0 for unallocated entries.
 
     The new K/V are scattered into each slot's pages first, then every
-    query attends over its slot's gathered pages under a causal-by-absolute-
-    position mask — so one dispatch serves any mix of prefill chunks and
+    query attends over its slot's pages under a causal-by-absolute-position
+    mask — so one dispatch serves any mix of prefill chunks and
     single-token decodes (the engine's mixed step). Invalid queries read
     finite garbage that is discarded downstream; causality guarantees they
     never contaminate a valid position.
+
+    ``backend`` dispatches the attention product (same semantics as
+    ``sparse.ops.resolve_backend``): 'pallas' runs the fused page-gather
+    flash-decode kernel (``kernels/paged_attention``) — the gathered
+    ``(B, P*page_size, ...)`` context is never materialized, and
+    ``kv_splits`` cuts the page walk into that many flash-decode lanes;
+    'ref' keeps the gather-then-softmax jnp path below as the parity
+    oracle; None/'auto' picks pallas on TPU, ref elsewhere.
     """
     b, c = x.shape[0], x.shape[1]
     ps = cache["k"].shape[1]
@@ -395,14 +406,22 @@ def paged_attention(p: dict, x: Array, cache: dict, page_table: Array,
         new_cache[name] = pool.at[phys.reshape(-1),
                                   offs.reshape(-1)].set(flat)
 
+    h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    g = h // kv
+    if sparse_ops.resolve_backend(backend or "auto") == "pallas":
+        out = paged_kops.paged_flash_attention(
+            q, new_cache["k"], new_cache["v"], page_table, positions,
+            window=cfg.attn_window, kv_splits=kv_splits)
+        out = out.astype(x.dtype)
+        y = _out_proj(p, out, x.dtype, sparse)
+        return shard_ann(y, ("batch", "seq", "embed")), new_cache
+
     P = page_table.shape[1]
     k_ctx = new_cache["k"][page_table].reshape(b, P * ps, *k_new.shape[2:])
     v_ctx = new_cache["v"][page_table].reshape(b, P * ps, *v_new.shape[2:])
     k_ctx = shard_ann(k_ctx, ("batch", "cache_seq", "kv_heads", "head_dim"))
     v_ctx = shard_ann(v_ctx, ("batch", "cache_seq", "kv_heads", "head_dim"))
 
-    h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
-    g = h // kv
     qg = q.reshape(b, c, kv, g, hd)
     s = jnp.einsum("bqkgh,bckh->bkgqc", qg, k_ctx,
                    preferred_element_type=jnp.float32) * hd ** -0.5

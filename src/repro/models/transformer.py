@@ -184,11 +184,14 @@ def _apply_layer_prefill(p: dict, x: Array, cfg: ModelConfig, kind: str,
 
 def _apply_layer_paged(p: dict, x: Array, cfg: ModelConfig, kind: str,
                        cache: dict, page_table: Array, positions: Array,
-                       n_tokens: Array, sp: Optional[dict] = None
-                       ) -> tuple[Array, dict]:
+                       n_tokens: Array, sp: Optional[dict] = None,
+                       attn_backend: Optional[str] = None,
+                       kv_splits: int = 1) -> tuple[Array, dict]:
     """Mixed prefill/decode layer against a block-paged KV pool (the
     continuous-batching engine path). Attention-only: recurrent mixers keep
-    per-slot O(1) state and use the slotted decode path instead."""
+    per-slot O(1) state and use the slotted decode path instead.
+    ``attn_backend``/``kv_splits`` select the paged-attention kernel
+    (see ``attention.paged_attention``)."""
     if kind != "attn":
         raise NotImplementedError(
             f"paged engine step supports attention layers only, got {kind!r}")
@@ -197,7 +200,7 @@ def _apply_layer_paged(p: dict, x: Array, cfg: ModelConfig, kind: str,
     new_cache = dict(cache)
     mix, new_cache["attn"] = attention.paged_attention(
         p["attn"], h, cache["attn"], page_table, positions, n_tokens, cfg,
-        sparse=sp.get("attn"))
+        sparse=sp.get("attn"), backend=attn_backend, kv_splits=kv_splits)
     x = x + mix
     h = apply_norm(p["ffn_norm"], x, cfg.norm)
     if cfg.moe is not None:
@@ -275,7 +278,8 @@ def _super_prefill(p: dict, x: Array, cfg: ModelConfig, cache: dict,
 
 def _super_paged(p: dict, x: Array, cfg: ModelConfig, cache: dict,
                  page_table: Array, positions: Array, n_tokens: Array,
-                 sp: Optional[dict] = None):
+                 sp: Optional[dict] = None,
+                 attn_backend: Optional[str] = None, kv_splits: int = 1):
     sp = sp or {}
     new_cache = {}
     for i, kind in enumerate(cfg.block_pattern):
@@ -283,7 +287,9 @@ def _super_paged(p: dict, x: Array, cfg: ModelConfig, cache: dict,
         x, new_cache[key] = _apply_layer_paged(p[key], x, cfg, kind,
                                                cache[key], page_table,
                                                positions, n_tokens,
-                                               sp.get(key))
+                                               sp.get(key),
+                                               attn_backend=attn_backend,
+                                               kv_splits=kv_splits)
     return x, new_cache
 
 
@@ -457,7 +463,8 @@ def make_model(cfg: ModelConfig, remat: bool = True,
                     positions, sp_rem.get(key))
         return head(params, x[:, -1:])[:, 0], new_cache
 
-    def paged_step(params, tokens, pools, page_table, start_pos, n_tokens
+    def paged_step(params, tokens, pools, page_table, start_pos, n_tokens,
+                   backend: Optional[str] = None, kv_splits: int = 1
                    ) -> tuple[Array, PyTree]:
         """Continuous-batching mixed step over a fixed-capacity slot batch.
 
@@ -467,6 +474,9 @@ def make_model(cfg: ModelConfig, remat: bool = True,
         page_table: (B, P) int32; start_pos/n_tokens: (B,) int32. Returns
         (logits at each slot's LAST valid token (B, vocab), new pools) —
         one jit dispatch serves any prefill/decode mix per engine tick.
+        ``backend``/``kv_splits`` (static) pick the paged-attention kernel:
+        'pallas' = fused page-gather flash-decode, 'ref' = jnp oracle,
+        None/'auto' = pallas on TPU.
         """
         dense, sparse = _split_params(params)
         sp_layers = (sparse or {}).get("layers", {})
@@ -478,7 +488,8 @@ def make_model(cfg: ModelConfig, remat: bool = True,
         def body(x, xs):
             layer_p, layer_c, layer_sp = xs
             x2, c2 = _super_paged(layer_p, x, cfg, layer_c, page_table,
-                                  positions, n_tokens, layer_sp)
+                                  positions, n_tokens, layer_sp,
+                                  attn_backend=backend, kv_splits=kv_splits)
             return x2, c2
 
         x, new_layer_pools = jax.lax.scan(
@@ -490,7 +501,8 @@ def make_model(cfg: ModelConfig, remat: bool = True,
                 key = f"r{i}_{kind}"
                 x, new_pools["rem"][key] = _apply_layer_paged(
                     dense["rem"][key], x, cfg, kind, pools["rem"][key],
-                    page_table, positions, n_tokens, sp_rem.get(key))
+                    page_table, positions, n_tokens, sp_rem.get(key),
+                    attn_backend=backend, kv_splits=kv_splits)
         last = jnp.clip(n_tokens - 1, 0, c - 1)
         xl = jnp.take_along_axis(x, last[:, None, None], axis=1)   # (B, 1, d)
         return head(params, xl)[:, 0], new_pools

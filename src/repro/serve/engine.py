@@ -10,11 +10,15 @@ callbacks, slot recycling). ``params`` may be a raw tree or
 step dispatches the same ``sparse_matmul`` kernels as the sequential
 serving path, so the engine is compression- and sharding-transparent.
 
-Because the scheduler emits exactly two tick widths (1 and
-``prefill_chunk``), the step compiles twice and then never again — request
-churn only changes array *contents*. KV lives in the block-paged pools of
+Because the scheduler emits at most three tick widths (1,
+``prefill_chunk`` and the optional ``first_chunk`` jumbo width), the step
+compiles at most three times and then never again — request churn only
+changes array *contents*. KV lives in the block-paged pools of
 ``serve/paged_kv.py``; pools are donated back to the step each tick, so
 the cache is updated in place where the backend supports donation.
+Attention inside the step dispatches by ``EngineConfig.attn_backend``:
+the 'pallas' backend walks page tables with the fused flash-decode kernel
+(``kernels/paged_attention``) instead of gathering the whole pool.
 """
 from __future__ import annotations
 
@@ -45,7 +49,16 @@ class EngineConfig:
     n_pages:       total pages per layer pool; default sizes every slot for
                    ``max_seq_len`` (+1 for the reserved trash page 0).
     token_budget:  max tokens scheduled per tick (decode first, remainder
-                   to prefill chunks); default ``max_batch + prefill_chunk``.
+                   to prefill chunks); default ``max_batch + first_chunk``
+                   (or ``+ prefill_chunk`` when no jumbo width is set).
+    first_chunk:   optional jumbo width (> prefill_chunk) for the FIRST
+                   chunk of a long prompt — a third compiled tick width
+                   that keeps TTFT off the steady-state chunk pace.
+    attn_backend:  paged-attention kernel dispatch: 'pallas' = fused
+                   page-gather flash-decode kernel, 'ref' = jnp gather
+                   oracle, 'auto' (default) = pallas on TPU, ref elsewhere.
+    kv_splits:     flash-decode KV-split lanes per slot on the pallas
+                   backend (1 = no split).
     """
     max_batch: int = 8
     prefill_chunk: int = 32
@@ -53,6 +66,9 @@ class EngineConfig:
     max_seq_len: int = 256
     n_pages: Optional[int] = None
     token_budget: Optional[int] = None
+    first_chunk: Optional[int] = None
+    attn_backend: str = "auto"
+    kv_splits: int = 1
     temperature: float = 0.0
     top_k: int = 0
     top_p: float = 1.0
@@ -88,17 +104,21 @@ class ServeEngine:
             capacity=config.max_batch, prefill_chunk=config.prefill_chunk,
             allocator=self.allocator, page_size=config.page_size,
             max_pages=config.pages_per_slot,
-            token_budget=config.token_budget)
+            token_budget=config.token_budget,
+            first_chunk=config.first_chunk)
         sampler = sampler or make_sampler(config.temperature, config.top_k,
                                           config.top_p)
         self._rng = rng if rng is not None else jax.random.PRNGKey(0)
         self._next_rid = 0
         self.n_ticks = 0
+        self.tick_widths: set[int] = set()   # distinct compiled step shapes
 
         def _step(params, pools, tokens, page_table, start_pos, n_tokens,
                   rng):
             logits, pools = model.paged_step(params, tokens, pools,
-                                             page_table, start_pos, n_tokens)
+                                             page_table, start_pos, n_tokens,
+                                             backend=config.attn_backend,
+                                             kv_splits=config.kv_splits)
             return sampler(logits, rng), logits, pools
 
         # donate the pools: the KV pages update in place instead of
@@ -127,6 +147,7 @@ class ServeEngine:
         plan = self.scheduler.next_tick(now=time.perf_counter())
         if plan is None:
             return []
+        self.tick_widths.add(plan.width)
         self._rng, sub = jax.random.split(self._rng)
         sampled, _, self.pools = self._step(
             self.params, self.pools, jnp.asarray(plan.tokens),

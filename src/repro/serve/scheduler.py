@@ -3,10 +3,11 @@ under a token budget, chunked prefill interleaved with decode, slot
 recycling on EOS/max-len.
 
 Scheduling is entirely host-side and shape-stable: every tick produces a
-``TickPlan`` whose arrays are ``(capacity, width)`` with ``width`` either 1
-(pure-decode tick) or ``prefill_chunk`` (a tick that advances at least one
-prompt) — so the engine's jitted mixed step compiles exactly twice and the
-request mix only changes *data*.
+``TickPlan`` whose arrays are ``(capacity, width)`` with ``width`` one of 1
+(pure-decode tick), ``prefill_chunk`` (a tick that advances at least one
+prompt) or the optional ``first_chunk`` jumbo width (a tick granting a long
+prompt its oversized FIRST chunk) — so the engine's jitted mixed step
+compiles at most three times and the request mix only changes *data*.
 
 The tick rules:
 
@@ -20,6 +21,11 @@ The tick rules:
 * **Chunked prefill** spends the remaining budget: prompts are consumed in
   chunks of up to ``prefill_chunk`` tokens, FCFS by admission order, so a
   32k prompt prefills across many ticks while decode slots keep streaming.
+* **Jumbo first chunk** (optional, ``first_chunk > prefill_chunk``): a
+  prompt longer than ``prefill_chunk`` gets its FIRST chunk at the jumbo
+  width, then falls back to regular chunks — a hybrid schedule that keeps
+  TTFT from being paced by the steady-state chunk size while bounding the
+  compiled widths at three.
 * **Slot recycling**: a request finishes on EOS or ``max_new_tokens``; its
   pages return to the free list and its slot is immediately re-admittable.
 """
@@ -87,16 +93,28 @@ class TickPlan:
 class Scheduler:
     def __init__(self, capacity: int, prefill_chunk: int,
                  allocator: PageAllocator, page_size: int, max_pages: int,
-                 token_budget: Optional[int] = None):
+                 token_budget: Optional[int] = None,
+                 first_chunk: Optional[int] = None):
         if prefill_chunk < 1:
             raise ValueError(f"prefill_chunk must be >= 1, {prefill_chunk}")
         self.capacity = int(capacity)
         self.prefill_chunk = int(prefill_chunk)
+        # jumbo width for the FIRST chunk of a long prompt (None/0 = off)
+        self.first_chunk = int(first_chunk) if first_chunk else None
+        if self.first_chunk is not None \
+                and self.first_chunk <= self.prefill_chunk:
+            raise ValueError(
+                f"first_chunk {self.first_chunk} must exceed prefill_chunk "
+                f"{self.prefill_chunk} (it is the jumbo width; use None to "
+                "disable)")
         self.allocator = allocator
         self.page_size = int(page_size)
         self.max_pages = int(max_pages)
-        # default: every slot can decode AND one full chunk can prefill
-        self.token_budget = int(token_budget or (capacity + prefill_chunk))
+        # default: every slot can decode AND one full (jumbo) chunk can
+        # prefill — without headroom for first_chunk the jumbo grant would
+        # always clamp back to the regular width
+        self.token_budget = int(
+            token_budget or (capacity + (self.first_chunk or prefill_chunk)))
         if self.token_budget < max(capacity, prefill_chunk):
             raise ValueError(
                 f"token_budget {self.token_budget} < "
@@ -165,11 +183,23 @@ class Scheduler:
         budget -= len(decode)               # decode never stalls
         grants: list[tuple[int, _Slot, int]] = []
         for i, s in prefill:                # FCFS by slot admission
-            c = min(self.prefill_chunk,
-                    len(s.req.prompt) - s.n_prefilled, max(budget, 0))
+            chunk = self.prefill_chunk
+            if (self.first_chunk is not None and s.n_prefilled == 0
+                    and len(s.req.prompt) > self.prefill_chunk):
+                chunk = self.first_chunk    # jumbo first chunk (TTFT)
+            c = min(chunk, len(s.req.prompt) - s.n_prefilled, max(budget, 0))
             grants.append((i, s, c))
             budget -= c
-        width = self.prefill_chunk if any(c > 0 for _, _, c in grants) else 1
+        # width stays one of {1, prefill_chunk, first_chunk}: a jumbo grant
+        # clamped (by budget or prompt length) to <= prefill_chunk rides the
+        # regular width, so no fourth shape ever compiles
+        max_grant = max((c for _, _, c in grants), default=0)
+        if max_grant == 0:
+            width = 1
+        elif max_grant <= self.prefill_chunk:
+            width = self.prefill_chunk
+        else:
+            width = self.first_chunk
 
         tokens = np.zeros((self.capacity, width), np.int32)
         start = np.zeros(self.capacity, np.int32)

@@ -10,7 +10,12 @@ The load-bearing guarantees:
     prompt (the attention-path equivalence, not just argmax),
   * scheduler mechanics: FCFS admission, token budget (decode never
     stalls), slot/page recycling, page-pressure queueing, EOS stop,
-    per-request streaming callbacks.
+    per-request streaming callbacks,
+  * hybrid prefill: with ``first_chunk`` set, a long prompt's FIRST tick
+    runs at the jumbo width and exactly three tick widths
+    ({1, prefill_chunk, first_chunk}) ever compile,
+  * the pallas paged-attention backend (fused page-gather flash-decode
+    kernel, interpret mode off-TPU) keeps per-token parity end to end.
 """
 import jax
 import jax.numpy as jnp
@@ -195,10 +200,12 @@ def test_engine_page_pressure_queues_fcfs(model, params_by_format):
 # Scheduler / allocator mechanics (no model)
 # ---------------------------------------------------------------------------
 
-def _sched(capacity=2, chunk=4, n_pages=64, max_pages=8, budget=None):
+def _sched(capacity=2, chunk=4, n_pages=64, max_pages=8, budget=None,
+           first_chunk=None):
     return Scheduler(capacity=capacity, prefill_chunk=chunk,
                      allocator=PageAllocator(n_pages), page_size=4,
-                     max_pages=max_pages, token_budget=budget)
+                     max_pages=max_pages, token_budget=budget,
+                     first_chunk=first_chunk)
 
 
 def _req(rid, plen, gen=4, **kw):
@@ -278,3 +285,75 @@ def test_scheduler_rejects_oversized_request():
     with pytest.raises(ValueError):
         s.add(Request(rid=1, prompt=np.zeros(0, np.int32),
                       max_new_tokens=4))
+
+
+# ---------------------------------------------------------------------------
+# Jumbo first chunk (third compiled tick width) + pallas paged attention
+# ---------------------------------------------------------------------------
+
+def test_scheduler_jumbo_first_chunk_4k_prompt():
+    """A 4k prompt's FIRST tick consumes the jumbo width; every later
+    prefill tick is the regular chunk; exactly three widths ever appear."""
+    s = _sched(capacity=1, chunk=32, n_pages=2048, max_pages=1100,
+               first_chunk=512)
+    s.add(_req(0, 4096, gen=2))
+    plan = s.next_tick()
+    assert plan.width == 512
+    assert plan.n_tokens.tolist() == [512]
+    s.complete_tick(plan, np.zeros(1, np.int64))
+    widths = {512}
+    while s.has_work():
+        plan = s.next_tick()
+        widths.add(plan.width)
+        if plan.width > 1:                    # regular chunks after jumbo
+            assert plan.width == 32
+            assert plan.n_tokens.max() <= 32
+        s.complete_tick(plan, np.full(1, 7))
+    assert widths == {512, 32, 1}
+
+
+def test_scheduler_jumbo_skips_short_prompts_and_validates():
+    # a prompt that fits one regular chunk never triggers the jumbo width
+    s = _sched(capacity=1, chunk=8, first_chunk=32)
+    s.add(_req(0, 8, gen=2))
+    assert s.next_tick().width == 8
+    # jumbo width must exceed the regular chunk
+    with pytest.raises(ValueError):
+        _sched(chunk=8, first_chunk=8)
+
+
+def test_engine_jumbo_first_chunk_three_widths(model, params_by_format):
+    """Engine-level hybrid prefill: the long prompt's first tick runs at
+    the jumbo width, exactly three step shapes compile, tokens still match
+    generate()."""
+    params = params_by_format["dense"]
+    prompts = _prompts([20, 3], model.cfg.vocab)
+    eng = ServeEngine(model, params,
+                      EngineConfig(max_batch=2, prefill_chunk=8, page_size=4,
+                                   max_seq_len=32, first_chunk=16))
+    out = eng.run([(p, GEN) for p in prompts])
+    assert eng.tick_widths == {1, 8, 16}
+    # jumbo 16 + regular chunk 4 for the 20-prompt; the short prompt's
+    # first grant is budget-clipped (18 - 16 = 2) so it takes two chunks
+    assert eng.scheduler.n_prefill_chunks == 2 + 2
+    for rid, p in enumerate(prompts):
+        ref = np.asarray(generate(model, params, p[None, :], GEN))[0]
+        np.testing.assert_array_equal(out["results"][rid], ref)
+
+
+def test_engine_pallas_backend_parity(model, params_by_format):
+    """The acceptance gate in-process: compressed weights served through
+    the fused page-gather flash-decode kernel (interpret mode) with KV
+    splits — per-token parity with sequential generate()."""
+    params = params_by_format["bcsr"]
+    prompts = _prompts([5, 12, 3], model.cfg.vocab)
+    eng = ServeEngine(model, params,
+                      EngineConfig(max_batch=3, prefill_chunk=8, page_size=4,
+                                   max_seq_len=24, attn_backend="pallas",
+                                   kv_splits=2))
+    out = eng.run([(p, GEN) for p in prompts])
+    for rid, p in enumerate(prompts):
+        ref = np.asarray(generate(model, params, p[None, :], GEN))[0]
+        np.testing.assert_array_equal(
+            out["results"][rid], ref,
+            err_msg=f"request {rid} (prompt_len={len(p)})")
