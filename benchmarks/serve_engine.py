@@ -1,6 +1,9 @@
 """Continuous-batching engine benchmark: aggregate tokens/s and p50/p95
 latency at several request mixes, engine vs the sequential single-request
-``generate`` path, on dense / BlockCSR / PaletteBCSR weights.
+``generate`` path, on dense / BlockCSR / PaletteBCSR weights — for the
+attention reference arch (smollm) and the recurrent archs the slot-state
+pools brought under the engine (rwkv6-3b, recurrentgemma-9b). Each row
+also records the pool byte split (KV pages vs recurrent state slots).
 
 The headline number is the batching win on the compressed serving path:
 one engine tick decodes every active slot in a single jitted dispatch,
@@ -31,6 +34,9 @@ MIXES = {
     "mixed_len": [(8, 16)] * 4 + [(48, 16)] * 4,
     "prefill_heavy": [(64, 8)] * 8,
 }
+# recurrent archs ride the decode-heavy mix (state pools are O(1) per
+# slot, so decode is where the slot-batching win lives)
+RECURRENT_ARCHS = ("rwkv6-3b", "recurrentgemma-9b")
 
 
 def _requests(mix, vocab: int):
@@ -118,19 +124,40 @@ def run():
         p = formats[fmt]
         s = _engine_stats(model, p, requests)
         seq_tok_s = _sequential_tok_s(model, p, requests)
-        rows.append({
-            "name": f"serve_engine/{mix_name}_{fmt}",
-            "us_per_call": 1e6 / max(s["tok_s"], 1e-9),
-            "derived": (f"engine_tok_s={s['tok_s']:.1f},"
-                        f"seq_tok_s={seq_tok_s:.1f},"
-                        f"batch_speedup={s['tok_s']/max(seq_tok_s,1e-9):.2f}x,"
-                        f"ttft_p50_ms={s['ttft_p50_s']*1e3:.1f},"
-                        f"ttft_p95_ms={s['ttft_p95_s']*1e3:.1f},"
-                        f"lat_p50_ms={s['latency_p50_s']*1e3:.1f},"
-                        f"lat_p95_ms={s['latency_p95_s']*1e3:.1f},"
-                        f"n_ticks={s['n_ticks']},"
-                        f"n_prefill_chunks={s['n_prefill_chunks']}")})
+        rows.append(_row(f"serve_engine/{mix_name}_{fmt}", s, seq_tok_s))
+
+    # recurrent archs under the engine (slot-state pools): BCSR-compressed,
+    # decode-heavy mix — the --assert-speedup gate covers these rows too
+    for arch in RECURRENT_ARCHS:
+        rmodel = build(arch, reduced=True)
+        rplan = CompressionPlan(block=(8, 64), min_sparsity=0.3,
+                                min_size=4096)
+        rpruned = prune_blocks_for_plan(rmodel.init(jax.random.PRNGKey(0)),
+                                        rplan, 0.75)
+        rcp = compress_params(rpruned, rplan)
+        requests = _requests(MIXES["decode_heavy"], rmodel.cfg.vocab)
+        s = _engine_stats(rmodel, rcp, requests)
+        seq_tok_s = _sequential_tok_s(rmodel, rcp, requests)
+        rows.append(_row(f"serve_engine/{arch}_decode_heavy_bcsr",
+                         s, seq_tok_s))
     return rows
+
+
+def _row(name, s, seq_tok_s):
+    return {
+        "name": name,
+        "us_per_call": 1e6 / max(s["tok_s"], 1e-9),
+        "derived": (f"engine_tok_s={s['tok_s']:.1f},"
+                    f"seq_tok_s={seq_tok_s:.1f},"
+                    f"batch_speedup={s['tok_s']/max(seq_tok_s,1e-9):.2f}x,"
+                    f"ttft_p50_ms={s['ttft_p50_s']*1e3:.1f},"
+                    f"ttft_p95_ms={s['ttft_p95_s']*1e3:.1f},"
+                    f"lat_p50_ms={s['latency_p50_s']*1e3:.1f},"
+                    f"lat_p95_ms={s['latency_p95_s']*1e3:.1f},"
+                    f"n_ticks={s['n_ticks']},"
+                    f"n_prefill_chunks={s['n_prefill_chunks']},"
+                    f"kv_pool_bytes={s['kv_page_bytes']},"
+                    f"state_pool_bytes={s['state_slot_bytes']}")}
 
 
 def main(argv=None) -> int:
@@ -142,9 +169,11 @@ def main(argv=None) -> int:
                     help="exit nonzero unless the batched compressed engine "
                          "beats sequential compressed serving (aggregate "
                          "tokens/s) on every decode-dominated compressed "
-                         "cell (prefill_heavy is reported but not gated: "
-                         "a one-shot sequential prefill is a single big "
-                         "dispatch and legitimately wins on CPU)")
+                         "cell — attention AND recurrent (rwkv/"
+                         "recurrentgemma) rows (prefill_heavy is reported "
+                         "but not gated: a one-shot sequential prefill is "
+                         "a single big dispatch and legitimately wins on "
+                         "CPU)")
     ap.add_argument("--assert-from", default="",
                     help="apply --assert-speedup to rows loaded from this "
                          "previously written --json file instead of "

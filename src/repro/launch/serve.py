@@ -116,10 +116,12 @@ def main(argv=None):
                     help="nucleus (top-p) filtering when sampling (1 = off)")
     ap.add_argument("--engine", action="store_true",
                     help="serve through the continuous-batching engine "
-                         "(serve/engine.py): paged KV cache, chunked "
-                         "prefill, FCFS scheduler over a fixed-capacity "
-                         "slot batch — many concurrent mixed-length "
-                         "requests instead of one fixed batch")
+                         "(serve/engine.py): slot resource pools (paged KV "
+                         "for attention incl. int8, slot-indexed state for "
+                         "RWKV/RG-LRU), chunked prefill, FCFS scheduler "
+                         "over a fixed-capacity slot batch — many "
+                         "concurrent mixed-length requests instead of one "
+                         "fixed batch")
     ap.add_argument("--max-batch", type=int, default=8,
                     help="engine slot capacity (concurrent requests)")
     ap.add_argument("--prefill-chunk", type=int, default=32,
@@ -261,22 +263,30 @@ def _load_requests(args, vocab: int) -> list[tuple[np.ndarray, int]]:
 
 
 def _run_engine(model, params, args):
-    """The --engine path: continuous batching over the paged KV cache."""
+    """The --engine path: continuous batching over the slot resource pools
+    (paged KV for attention layers, slot-indexed state for recurrent)."""
     from repro.serve.engine import EngineConfig, ServeEngine
 
     requests = _load_requests(args, model.cfg.vocab)
     max_seq = max(len(p) + g for p, g in requests)
-    engine = ServeEngine(
-        model, params,
-        EngineConfig(max_batch=args.max_batch,
-                     prefill_chunk=args.prefill_chunk,
-                     page_size=args.page_size, max_seq_len=max_seq,
-                     first_chunk=args.first_chunk or None,
-                     attn_backend=args.attn_backend,
-                     kv_splits=args.kv_splits,
-                     temperature=args.temperature, top_k=args.top_k,
-                     top_p=args.top_p),
-        rng=jax.random.PRNGKey(1))
+    try:
+        engine = ServeEngine(
+            model, params,
+            EngineConfig(max_batch=args.max_batch,
+                         prefill_chunk=args.prefill_chunk,
+                         page_size=args.page_size, max_seq_len=max_seq,
+                         first_chunk=args.first_chunk or None,
+                         attn_backend=args.attn_backend,
+                         kv_splits=args.kv_splits,
+                         temperature=args.temperature, top_k=args.top_k,
+                         top_p=args.top_p),
+            rng=jax.random.PRNGKey(1))
+    except NotImplementedError as e:
+        raise SystemExit(f"--engine: {e}")
+    pb = engine.pool_bytes
+    print(f"engine pools: kv_pages={pb['kv_page_bytes'] / 2**20:.2f} MiB "
+          f"recurrent_state={pb['state_slot_bytes'] / 2**20:.2f} MiB "
+          f"({engine.config.max_batch} slots)")
     out = engine.run(requests)
     s = out["stats"]
     print(f"engine: {s['n_requests']} requests "
@@ -285,7 +295,8 @@ def _run_engine(model, params, args):
           f"ttft p50/p95 {s['ttft_p50_s']*1e3:.0f}/{s['ttft_p95_s']*1e3:.0f}ms"
           f" | latency p50/p95 {s['latency_p50_s']*1e3:.0f}/"
           f"{s['latency_p95_s']*1e3:.0f}ms | {s['n_ticks']} ticks, "
-          f"{s['n_prefill_chunks']} prefill chunks")
+          f"{s['n_prefill_chunks']} prefill chunks | pools "
+          f"kv={s['kv_page_bytes']} state={s['state_slot_bytes']} bytes")
     print("sample:", out["results"][0][:16].tolist())
     if args.parity_check:
         if args.temperature > 0:

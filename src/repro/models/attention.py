@@ -351,12 +351,19 @@ def init_paged_kv(cfg: ModelConfig, n_pages: int, page_size: int,
     hd) pages shared by every request slot. Page 0 is the engine's trash
     page — never allocated to a request, so masked-out token writes can
     land there harmlessly. Slot-to-page ownership lives in the engine's
-    page table, not here."""
-    if cfg.kv_cache_dtype == "int8":
-        raise NotImplementedError(
-            "paged KV pools store the compute dtype; the int8 paged cache "
-            "is not implemented (use the ring cache for int8 configs)")
+    page table, not here.
+
+    kv_cache_dtype='int8': pages store int8 K/V plus one f32 scale per
+    (page, offset, head) — the same static symmetric scheme as the ring
+    cache (``_quantize_heads``), halving page-pool HBM."""
     kv, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+    if cfg.kv_cache_dtype == "int8":
+        return {
+            "k": jnp.zeros((n_pages, page_size, kv, hd), jnp.int8),
+            "v": jnp.zeros((n_pages, page_size, kv, hd), jnp.int8),
+            "k_scale": jnp.zeros((n_pages, page_size, kv, 1), jnp.float32),
+            "v_scale": jnp.zeros((n_pages, page_size, kv, 1), jnp.float32),
+        }
     return {"k": jnp.zeros((n_pages, page_size, kv, hd), dtype),
             "v": jnp.zeros((n_pages, page_size, kv, hd), dtype)}
 
@@ -400,25 +407,44 @@ def paged_attention(p: dict, x: Array, cache: dict, page_table: Array,
     phys = jnp.where(valid, phys, 0)                            # trash page
     offs = positions % ps
     new_cache = {}
-    for name, new in (("k", k_new), ("v", v_new)):
-        pool = cache[name]
-        flat = new.reshape(b * c, *new.shape[2:]).astype(pool.dtype)
-        new_cache[name] = pool.at[phys.reshape(-1),
-                                  offs.reshape(-1)].set(flat)
+    if cfg.kv_cache_dtype == "int8":
+        # Same static symmetric scheme as the ring cache: quantize the new
+        # chunk per (slot, position, head), scatter codes + scales. The
+        # attention product runs on a pool dequantized once per dispatch
+        # (fusing the dequant into the page-gather kernel is future work).
+        for name, new in (("k", k_new), ("v", v_new)):
+            qn, sc = _quantize_heads(new)
+            new_cache[name] = cache[name].at[
+                phys.reshape(-1), offs.reshape(-1)].set(
+                    qn.reshape(b * c, *qn.shape[2:]))
+            new_cache[name + "_scale"] = cache[name + "_scale"].at[
+                phys.reshape(-1), offs.reshape(-1)].set(
+                    sc.reshape(b * c, *sc.shape[2:]))
+        k_pool = (new_cache["k"].astype(jnp.float32)
+                  * new_cache["k_scale"]).astype(x.dtype)
+        v_pool = (new_cache["v"].astype(jnp.float32)
+                  * new_cache["v_scale"]).astype(x.dtype)
+    else:
+        for name, new in (("k", k_new), ("v", v_new)):
+            pool = cache[name]
+            flat = new.reshape(b * c, *new.shape[2:]).astype(pool.dtype)
+            new_cache[name] = pool.at[phys.reshape(-1),
+                                      offs.reshape(-1)].set(flat)
+        k_pool, v_pool = new_cache["k"], new_cache["v"]
 
     h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
     g = h // kv
     if sparse_ops.resolve_backend(backend or "auto") == "pallas":
         out = paged_kops.paged_flash_attention(
-            q, new_cache["k"], new_cache["v"], page_table, positions,
+            q, k_pool, v_pool, page_table, positions,
             window=cfg.attn_window, kv_splits=kv_splits)
         out = out.astype(x.dtype)
         y = _out_proj(p, out, x.dtype, sparse)
         return shard_ann(y, ("batch", "seq", "embed")), new_cache
 
     P = page_table.shape[1]
-    k_ctx = new_cache["k"][page_table].reshape(b, P * ps, *k_new.shape[2:])
-    v_ctx = new_cache["v"][page_table].reshape(b, P * ps, *v_new.shape[2:])
+    k_ctx = k_pool[page_table].reshape(b, P * ps, *k_new.shape[2:])
+    v_ctx = v_pool[page_table].reshape(b, P * ps, *v_new.shape[2:])
     k_ctx = shard_ann(k_ctx, ("batch", "cache_seq", "kv_heads", "head_dim"))
     v_ctx = shard_ann(v_ctx, ("batch", "cache_seq", "kv_heads", "head_dim"))
 

@@ -75,19 +75,24 @@ def _rglru_coeffs(p: dict, u: Array):
     return a, b
 
 
-def rglru_scan(p: dict, u: Array, h0: Array | None = None) -> tuple[Array, Array]:
-    """u: (B, S, w) -> (h (B, S, w), h_last (B, w)). Linear scan h=a*h+b."""
-    a, b = _rglru_coeffs(p, u)
-    if h0 is not None:
-        # fold the carried state into the first step's offset
-        b = b.at[:, 0].add(a[:, 0] * h0.astype(jnp.float32))
-
+def _lru_scan(a: Array, b: Array) -> Array:
+    """Associative scan of h_t = a_t * h_{t-1} + b_t over axis 1 (f32)."""
     def combine(x, y):
         a1, b1 = x
         a2, b2 = y
         return a2 * a1, a2 * b1 + b2
 
     _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h
+
+
+def rglru_scan(p: dict, u: Array, h0: Array | None = None) -> tuple[Array, Array]:
+    """u: (B, S, w) -> (h (B, S, w), h_last (B, w)). Linear scan h=a*h+b."""
+    a, b = _rglru_coeffs(p, u)
+    if h0 is not None:
+        # fold the carried state into the first step's offset
+        b = b.at[:, 0].add(a[:, 0] * h0.astype(jnp.float32))
+    h = _lru_scan(a, b)
     return h.astype(u.dtype), h[:, -1]
 
 
@@ -118,6 +123,55 @@ def apply_rglru_block(p: dict, x: Array, cfg: ModelConfig,
     else:
         h, h_last = rglru_step(p, u, state["h"])
     h = shard_ann(h, ("batch", "seq", "lru"))
+    y = apply_proj(p, gate * h, "lru_out", sparse)
+    y = shard_ann(y, ("batch", "seq", "embed"))
+    return y, {"h": h_last, "conv": new_conv}
+
+
+def apply_rglru_block_paged(p: dict, x: Array, cfg: ModelConfig, state: dict,
+                            n_tokens: Array, sparse: dict | None = None):
+    """Slot-pooled Griffin recurrent block — the continuous-batching
+    engine's mixed step (any mix of prefill chunks and 1-token decodes).
+
+    x: (B, C, d) — B engine slots, slot i carrying ``n_tokens[i]`` valid
+    tokens (0 = inactive). state is the slot-indexed state pool
+    {"h": (B, w) f32, "conv": (B, cw-1, w)}. Invalid tail positions are
+    masked with identity scan coefficients (a=1, b=0 — exact in IEEE), so
+    the scan's last element equals the state after exactly ``n_tokens``
+    updates: chunked prefill matches the full-sequence scan and inactive
+    slots keep their state bit-exactly. The conv trailing context is
+    re-gathered at each slot's own valid length.
+    """
+    cw = cfg.conv1d_width
+    c = x.shape[1]
+    valid = jnp.arange(c, dtype=jnp.int32)[None, :] < n_tokens[:, None]
+
+    gate = jax.nn.gelu(apply_proj(p, x, "lru_gate", sparse))
+    u = apply_proj(p, x, "lru_in", sparse)
+    u = shard_ann(u, ("batch", "seq", "lru"))
+
+    # Depthwise causal conv against the carried trailing context. Valid
+    # positions only ever read positions <= themselves (a valid prefix),
+    # so no input masking is needed; the new context is gathered at each
+    # slot's own n_tokens (c=0 slots re-select their old pad exactly).
+    kern = p["conv1d"]
+    pad = state["conv"].astype(u.dtype)
+    ux = jnp.concatenate([pad, u], axis=1)          # (B, C+cw-1, w)
+    u = sum(ux[:, i:i + c] * kern[i].astype(u.dtype) for i in range(cw))
+    if cw > 1:
+        idx = n_tokens[:, None] + jnp.arange(cw - 1, dtype=jnp.int32)
+        new_conv = jnp.take_along_axis(ux, idx[:, :, None], axis=1)
+    else:
+        new_conv = pad
+    new_conv = new_conv.astype(state["conv"].dtype)
+
+    a, b = _rglru_coeffs(p, u)
+    a = jnp.where(valid[..., None], a, 1.0)
+    b = jnp.where(valid[..., None], b, 0.0)
+    b = b.at[:, 0].add(a[:, 0] * state["h"])        # fold carried h0
+    h = _lru_scan(a, b)
+    h_last = h[:, -1]
+    h = shard_ann(h.astype(u.dtype), ("batch", "seq", "lru"))
     y = apply_proj(p, gate * h, "lru_out", sparse)
     y = shard_ann(y, ("batch", "seq", "embed"))
     return y, {"h": h_last, "conv": new_conv}

@@ -150,15 +150,40 @@ def wkv_step(r, k, v, logw, u, state):
     return o[:, None], state2
 
 
-def apply_time_mix(p: dict, x: Array, cfg: ModelConfig,
-                   state: dict | None = None,
-                   sparse: dict | None = None):
-    """RWKV-6 time mixing. state = {"S": (B,H,hd,hd), "shift": (B,d)}.
-    ``sparse``: optional {"rwkv_r"|...|"rwkv_o": BlockCSR} compressed
-    projections (the r/k/v/g/o matmuls dispatch ``sparse_matmul``)."""
+def wkv_scan(r, k, v, logw, u, state, valid):
+    """Intra-chunk ``lax.scan`` of the O(1) recurrence with masked state
+    advances — the engine's mixed-step path (serve/engine.py).
+
+    r,k,v,logw: (B, C, H, hd); u: (H, hd); state: (B, H, hd, hd) f32;
+    valid: (B, C) bool. The state advances only at valid positions, so a
+    slot whose tick carries c < C tokens ends with exactly c updates
+    applied (inactive slots keep their state bit-exactly). Positionwise
+    math matches ``wkv_step`` (the decode oracle). Returns
+    (o (B, C, H, hd) f32, state')."""
+    f32 = jnp.float32
+
+    def body(S, xs):
+        rc, kc, vc, lw, vl = xs                      # (B, H, hd) x4, (B,)
+        w = jnp.exp(lw)
+        kv = jnp.einsum("bhd,bhv->bhdv", kc, vc)
+        o = jnp.einsum("bhd,bhdv->bhv", rc, S + u[None, :, :, None] * kv)
+        S2 = jnp.where(vl[:, None, None, None], w[..., None] * S + kv, S)
+        return S2, o
+
+    seq = tuple(x.astype(f32).transpose(1, 0, 2, 3)
+                for x in (r, k, v, logw)) + (valid.T,)
+    state, outs = jax.lax.scan(body, state, seq)
+    return outs.transpose(1, 0, 2, 3), state
+
+
+def _time_mix_inputs(p: dict, x: Array, cfg: ModelConfig, shift,
+                     sparse: dict | None):
+    """Token-shift ddlerp + r/k/v/g/decay projections shared by every
+    time-mix entry point. Returns (rh, kh, vh, lwh, u, g) with r/k/v/logw
+    already split into (B, S, H, hd) heads."""
     dt = x.dtype
     hd = cfg.rwkv_head_dim
-    prev = _token_shift(x, state["shift"] if state else None)
+    prev = _token_shift(x, shift)
     xx = (prev - x).astype(jnp.float32)
     x32 = x.astype(jnp.float32)
 
@@ -178,24 +203,75 @@ def apply_time_mix(p: dict, x: Array, cfg: ModelConfig,
     rh, kh, vh = _heads(r, hd), _heads(k, hd), _heads(v, hd)
     lwh = _heads(logw, hd)
     rh = shard_ann(rh, ("batch", "seq", "rwkv_heads", "head_dim"))
+    return rh, kh, vh, lwh, u, g
 
-    if state is None:
-        o, s_new = chunked_wkv(rh, kh, vh, lwh, u, None)
-    else:
-        o, s_new = wkv_step(rh, kh, vh, lwh, u, state["S"])
 
+def _time_mix_output(p: dict, o: Array, g: Array, x: Array, hd: int,
+                     sparse: dict | None) -> Array:
+    """Per-head groupnorm (ln_x), silu gate, and output projection."""
+    dt = x.dtype
     b, s = x.shape[0], x.shape[1]
-    o = o.reshape(b, s, -1)
-    # per-head groupnorm (ln_x)
     oh = o.reshape(b, s, -1, hd)
     mu = jnp.mean(oh, axis=-1, keepdims=True)
     var = jnp.var(oh, axis=-1, keepdims=True)
     o = ((oh - mu) * jax.lax.rsqrt(var + 1e-5)).reshape(b, s, -1)
     o = (o * p["ln_x_scale"]).astype(dt) * g
     y = apply_proj(p, o, "rwkv_o", sparse)
-    y = shard_ann(y, ("batch", "seq", "embed"))
+    return shard_ann(y, ("batch", "seq", "embed"))
+
+
+def _shift_update(x: Array, n_tokens: Array, old: Array) -> Array:
+    """New token-shift carry for the slot-pooled paths: the last VALID
+    token's input per slot; slots with no tokens this tick keep theirs."""
+    idx = jnp.clip(n_tokens - 1, 0, x.shape[1] - 1)
+    last = jnp.take_along_axis(x, idx[:, None, None], axis=1)[:, 0]
+    return jnp.where((n_tokens > 0)[:, None], last.astype(jnp.float32), old)
+
+
+def apply_time_mix(p: dict, x: Array, cfg: ModelConfig,
+                   state: dict | None = None,
+                   sparse: dict | None = None):
+    """RWKV-6 time mixing. state = {"S": (B,H,hd,hd), "shift": (B,d)}.
+    ``sparse``: optional {"rwkv_r"|...|"rwkv_o": BlockCSR} compressed
+    projections (the r/k/v/g/o matmuls dispatch ``sparse_matmul``)."""
+    hd = cfg.rwkv_head_dim
+    rh, kh, vh, lwh, u, g = _time_mix_inputs(
+        p, x, cfg, state["shift"] if state else None, sparse)
+
+    if state is None:
+        o, s_new = chunked_wkv(rh, kh, vh, lwh, u, None)
+    else:
+        o, s_new = wkv_step(rh, kh, vh, lwh, u, state["S"])
+
+    o = o.reshape(x.shape[0], x.shape[1], -1)
+    y = _time_mix_output(p, o, g, x, hd, sparse)
     new_state = {"S": s_new, "shift": x[:, -1].astype(jnp.float32)}
     return y, new_state
+
+
+def apply_time_mix_paged(p: dict, x: Array, cfg: ModelConfig, state: dict,
+                         n_tokens: Array, sparse: dict | None = None):
+    """Slot-pooled RWKV-6 time mixing — the continuous-batching engine's
+    mixed step (any mix of prefill chunks and single-token decodes).
+
+    x: (B, C, d) — B engine slots, up to C new tokens each; slot i carries
+    ``n_tokens[i]`` valid tokens (0 = inactive). state is the slot-indexed
+    state pool {"S": (B,H,hd,hd), "shift": (B,d)}: the token-shift carry
+    crosses chunk boundaries through ``state["shift"]``, and the WKV state
+    advances through an intra-chunk ``lax.scan`` masked to each slot's
+    valid positions (``wkv_scan``) — so chunked prefill equals the
+    sequential recurrence and inactive slots keep their state bit-exactly.
+    """
+    hd = cfg.rwkv_head_dim
+    valid = jnp.arange(x.shape[1], dtype=jnp.int32)[None, :] \
+        < n_tokens[:, None]
+    rh, kh, vh, lwh, u, g = _time_mix_inputs(p, x, cfg, state["shift"],
+                                             sparse)
+    o, s_new = wkv_scan(rh, kh, vh, lwh, u, state["S"], valid)
+    o = o.reshape(x.shape[0], x.shape[1], -1)
+    y = _time_mix_output(p, o, g, x, hd, sparse)
+    return y, {"S": s_new, "shift": _shift_update(x, n_tokens,
+                                                 state["shift"])}
 
 
 def apply_channel_mix(p: dict, x: Array, state: dict | None = None,
@@ -215,6 +291,16 @@ def apply_channel_mix(p: dict, x: Array, state: dict | None = None,
     y = r * kv
     y = shard_ann(y, ("batch", "seq", "embed"))
     return y, {"shift": x[:, -1].astype(jnp.float32)}
+
+
+def apply_channel_mix_paged(p: dict, x: Array, state: dict, n_tokens: Array,
+                            sparse: dict | None = None):
+    """Slot-pooled channel mix: same positionwise math as
+    ``apply_channel_mix`` (the FFN has no cross-token recurrence beyond the
+    one-step token shift), but the shift carry advances to each slot's last
+    VALID token — slots with no tokens this tick keep theirs."""
+    y, _ = apply_channel_mix(p, x, state, sparse)
+    return y, {"shift": _shift_update(x, n_tokens, state["shift"])}
 
 
 def init_rwkv_state(cfg: ModelConfig, batch: int) -> dict:

@@ -187,23 +187,49 @@ def _apply_layer_paged(p: dict, x: Array, cfg: ModelConfig, kind: str,
                        n_tokens: Array, sp: Optional[dict] = None,
                        attn_backend: Optional[str] = None,
                        kv_splits: int = 1) -> tuple[Array, dict]:
-    """Mixed prefill/decode layer against a block-paged KV pool (the
-    continuous-batching engine path). Attention-only: recurrent mixers keep
-    per-slot O(1) state and use the slotted decode path instead.
+    """Mixed prefill/decode layer against the slot resource pool tree (the
+    continuous-batching engine path). Attention layers use block-paged KV
+    pools; recurrent mixers (rglru/rwkv) use slot-indexed state pools — no
+    paging, O(1) per slot — with chunked prefill handled by intra-chunk
+    scans (``apply_rglru_block_paged`` / ``apply_time_mix_paged``).
     ``attn_backend``/``kv_splits`` select the paged-attention kernel
     (see ``attention.paged_attention``)."""
-    if kind != "attn":
+    if kind not in ("attn", "rglru", "rwkv"):
         raise NotImplementedError(
-            f"paged engine step supports attention layers only, got {kind!r}")
+            f"layer kind {kind!r} has no slot resource pool — the engine "
+            "covers attn/rglru/rwkv; use the sequential serving path "
+            "(launch/serve without --engine)")
     sp = sp or {}
+    if kind != "attn":
+        # A slot whose FIRST prefill chunk lands this tick (absolute
+        # position 0) starts a new request: zero its recurrent state
+        # in-step, shape-stably — state left by a previous occupant of the
+        # slot must not leak in. (The engine also zeroes recycled slots
+        # host-side; this in-step reset is the correctness invariant.)
+        fresh = (positions[:, 0] == 0) & (n_tokens > 0)
+        cache = jax.tree.map(
+            lambda l: jnp.where(
+                fresh.reshape((-1,) + (1,) * (l.ndim - 1)),
+                jnp.zeros_like(l), l),
+            cache)
     h = apply_norm(p["pre_norm"], x, cfg.norm)
     new_cache = dict(cache)
-    mix, new_cache["attn"] = attention.paged_attention(
-        p["attn"], h, cache["attn"], page_table, positions, n_tokens, cfg,
-        sparse=sp.get("attn"), backend=attn_backend, kv_splits=kv_splits)
+    if kind == "attn":
+        mix, new_cache["attn"] = attention.paged_attention(
+            p["attn"], h, cache["attn"], page_table, positions, n_tokens, cfg,
+            sparse=sp.get("attn"), backend=attn_backend, kv_splits=kv_splits)
+    elif kind == "rglru":
+        mix, new_cache["rec"] = rglru.apply_rglru_block_paged(
+            p["rec"], h, cfg, cache["rec"], n_tokens, sparse=sp.get("rec"))
+    elif kind == "rwkv":
+        mix, new_cache["tm"] = rwkv6.apply_time_mix_paged(
+            p["tm"], h, cfg, cache["tm"], n_tokens, sparse=sp.get("tm"))
     x = x + mix
     h = apply_norm(p["ffn_norm"], x, cfg.norm)
-    if cfg.moe is not None:
+    if kind == "rwkv":
+        f, new_cache["cm"] = rwkv6.apply_channel_mix_paged(
+            p["cm"], h, cache["cm"], n_tokens, sparse=sp.get("cm"))
+    elif cfg.moe is not None:
         f, _ = moe_lib.apply_moe(p["moe"], h, cfg, sparse=sp.get("moe"))
     else:
         f = apply_mlp(p["mlp"], h, cfg.act, cfg.mlp_gated,
@@ -312,8 +338,10 @@ class Model:
     init_cache: Callable        # (batch, seq_len, dtype) -> cache
     # (params, tokens, pools, page_table, start_pos, n_tokens)
     #   -> (last-valid-token logits, pools) — the continuous-batching
-    # engine's mixed step (serve/engine.py). None for architectures the
-    # paged path doesn't cover (recurrent mixers, int8 KV cache).
+    # engine's mixed step (serve/engine.py) over the slot resource pool
+    # tree: block-paged KV for attention layers, slot-indexed state pools
+    # for recurrent mixers. None only for layer kinds outside
+    # attn/rglru/rwkv coverage.
     paged_step: Optional[Callable] = None
 
 
@@ -507,8 +535,8 @@ def make_model(cfg: ModelConfig, remat: bool = True,
         xl = jnp.take_along_axis(x, last[:, None, None], axis=1)   # (B, 1, d)
         return head(params, xl)[:, 0], new_pools
 
-    paged_ok = (all(k == "attn" for k in cfg.block_pattern)
-                and cfg.kv_cache_dtype != "int8")
+    paged_ok = all(k in ("attn", "rglru", "rwkv")
+                   for k in cfg.block_pattern + rem)
     return Model(cfg=cfg, init=init, apply_train=apply_train,
                  apply_hidden=apply_hidden, head=head,
                  decode_step=decode_step, prefill=prefill,

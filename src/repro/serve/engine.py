@@ -13,11 +13,16 @@ serving path, so the engine is compression- and sharding-transparent.
 Because the scheduler emits at most three tick widths (1,
 ``prefill_chunk`` and the optional ``first_chunk`` jumbo width), the step
 compiles at most three times and then never again — request churn only
-changes array *contents*. KV lives in the block-paged pools of
-``serve/paged_kv.py``; pools are donated back to the step each tick, so
-the cache is updated in place where the backend supports donation.
-Attention inside the step dispatches by ``EngineConfig.attn_backend``:
-the 'pallas' backend walks page tables with the fused flash-decode kernel
+changes array *contents*. Per-request memory lives in the slot resource
+pools of ``serve/paged_kv.py`` — block-paged KV for attention layers
+(int8 pages + scales for int8-KV configs), slot-indexed recurrent state
+for RWKV / RG-LRU layers, coexisting in one tree for hybrids — and pools
+are donated back to the step each tick, so they update in place where the
+backend supports donation. Recurrent slots are admission-free (pages are
+reserved only when the model has attention layers), and a recycled slot's
+recurrent state is zeroed before its next occupant. Attention inside the
+step dispatches by ``EngineConfig.attn_backend``: the 'pallas' backend
+walks page tables with the fused flash-decode kernel
 (``kernels/paged_attention``) instead of gathering the whole pool.
 """
 from __future__ import annotations
@@ -31,7 +36,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models.transformer import Model
-from repro.serve.paged_kv import PageAllocator, init_paged_cache, pages_for
+from repro.serve.paged_kv import (PageAllocator, init_paged_cache, pages_for,
+                                  slot_resource_bytes, unsupported_kinds,
+                                  zero_state_slots)
 from repro.serve.scheduler import Request, Scheduler
 from repro.serve.step import make_sampler
 
@@ -91,21 +98,31 @@ class ServeEngine:
     def __init__(self, model: Model, params, config: EngineConfig,
                  sampler: Optional[Callable] = None, rng=None):
         if model.paged_step is None:
+            bad = unsupported_kinds(model)
             raise NotImplementedError(
-                f"{model.cfg.name}: paged engine needs an attention-only "
-                "architecture with a non-int8 KV cache")
+                f"{model.cfg.name}: layer kind(s) {', '.join(map(repr, bad))}"
+                " have no slot resource pool — the engine covers "
+                "attn/rglru/rwkv; use the sequential serving path "
+                "(launch/serve without --engine)")
         self.model = model
         self.params = params
         self.config = config
+        kinds = (tuple(model.cfg.block_pattern)
+                 + tuple(model.cfg.remainder_pattern))
+        self.has_attn = "attn" in kinds
+        self.has_state = any(k in ("rglru", "rwkv") for k in kinds)
         self.pools = init_paged_cache(model, config.total_pages,
-                                      config.page_size)
+                                      config.page_size,
+                                      capacity=config.max_batch)
+        self.pool_bytes = slot_resource_bytes(self.pools)
         self.allocator = PageAllocator(config.total_pages)
         self.scheduler = Scheduler(
             capacity=config.max_batch, prefill_chunk=config.prefill_chunk,
             allocator=self.allocator, page_size=config.page_size,
             max_pages=config.pages_per_slot,
             token_budget=config.token_budget,
-            first_chunk=config.first_chunk)
+            first_chunk=config.first_chunk,
+            reserve_pages=self.has_attn)
         sampler = sampler or make_sampler(config.temperature, config.top_k,
                                           config.top_p)
         self._rng = rng if rng is not None else jax.random.PRNGKey(0)
@@ -125,6 +142,10 @@ class ServeEngine:
         # copying the whole pool every tick (no-op on backends without
         # donation support)
         self._step = jax.jit(_step, donate_argnums=(1,))
+        # slot hygiene: zero a recycled slot's recurrent state before its
+        # next occupant (one compiled shape — the mask is (capacity,) bool)
+        self._zero_slots = (jax.jit(zero_state_slots, donate_argnums=(0,))
+                            if self.has_state else None)
 
     # -- request intake -----------------------------------------------------
 
@@ -154,8 +175,14 @@ class ServeEngine:
             jnp.asarray(self.scheduler.page_table()),
             jnp.asarray(plan.start_pos), jnp.asarray(plan.n_tokens), sub)
         self.n_ticks += 1
-        return self.scheduler.complete_tick(plan, np.asarray(sampled),
-                                            now=time.perf_counter())
+        finished = self.scheduler.complete_tick(plan, np.asarray(sampled),
+                                                now=time.perf_counter())
+        if finished and self._zero_slots is not None:
+            mask = np.zeros(self.config.max_batch, bool)
+            for r in finished:
+                mask[r["slot"]] = True
+            self.pools = self._zero_slots(self.pools, jnp.asarray(mask))
+        return finished
 
     def run(self, requests=None) -> dict:
         """Serve until the queue drains. ``requests``: optional iterable of
@@ -198,6 +225,8 @@ class ServeEngine:
             "n_requests": len(finished),
             "n_generated": int(n_new),
             "n_prompt": int(sum(r["n_prompt"] for r in finished)),
+            "kv_page_bytes": self.pool_bytes["kv_page_bytes"],
+            "state_slot_bytes": self.pool_bytes["state_slot_bytes"],
             "wall_s": wall,
             "tok_s": n_new / wall if wall > 0 else 0.0,
             "ttft_p50_s": pct(ttft, 50), "ttft_p95_s": pct(ttft, 95),

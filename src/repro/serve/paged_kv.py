@@ -1,34 +1,48 @@
-"""Block-paged KV cache for the continuous-batching serving engine.
+"""Slot resource pools for the continuous-batching serving engine.
 
 The one-ring-per-batch cache (``Model.init_cache``) allocates a dense
 ``(batch, seq_len, ...)`` buffer per layer: every request pays for the
 longest request's context, and a finished request's memory can't be reused
 without reallocating (= recompiling) the whole batch. The engine instead
-stores KV in fixed-size **pages** — per layer, a pool of
-``(n_pages, page_size, kv_heads, head_dim)`` K and V pages shared by every
-request slot — and maps each request's logical context onto physical pages
-through a per-slot **page table** ``(capacity, max_pages)``: logical page
-``p`` of a slot covers absolute positions ``[p*page_size, (p+1)*page_size)``.
+gives every request slot a **slot resource pool** per layer, of which there
+are two kinds, keyed by the layer kind:
 
-Allocation is host-side (a free list — pages are ints, allocation never
-enters the jitted step); the jitted step only consumes the page table, so
-admitting, finishing, and recycling requests changes *data*, never shapes:
-no recompiles as traffic churns. Page 0 is reserved as the trash page —
-masked-out token writes land there, and unallocated page-table entries
-point at it (their reads are masked by the causal-by-absolute-position
-mask in ``models.attention.paged_attention``).
+* **Block-paged KV** (``attn`` layers): a pool of
+  ``(n_pages, page_size, kv_heads, head_dim)`` K and V pages shared by
+  every request slot, mapped onto each request's logical context through a
+  per-slot **page table** ``(capacity, max_pages)``: logical page ``p`` of
+  a slot covers absolute positions ``[p*page_size, (p+1)*page_size)``.
+  Int8-KV configs store int8 pages plus per-(page, offset, head) f32
+  scales (``attention.init_paged_kv``).
+* **Slot-indexed recurrent state** (``rglru``/``rwkv`` layers): fixed-size
+  state arrays with a leading ``capacity`` axis — slot ``i``'s state lives
+  at index ``i``. No paging: recurrent state is O(1) per slot regardless
+  of context length, so these slots need no admission-time reservation.
 
-The pool tree mirrors ``Model.init_cache``'s structure (scanned layers
-stacked over ``n_super``, unrolled remainder under ``rem``) so it rides
-through the same layer-stack ``lax.scan``.
+Both kinds coexist in one pool tree for hybrid block patterns (e.g.
+recurrentgemma's 2:1 RG-LRU:attention pattern), mirroring
+``Model.init_cache``'s structure (scanned layers stacked over ``n_super``,
+unrolled remainder under ``rem``) so the tree rides through the same
+layer-stack ``lax.scan``.
+
+Page allocation is host-side (a free list — pages are ints, allocation
+never enters the jitted step); the jitted step only consumes the page
+table, so admitting, finishing, and recycling requests changes *data*,
+never shapes: no recompiles as traffic churns. Page 0 is reserved as the
+trash page — masked-out token writes land there, and unallocated
+page-table entries point at it (their reads are masked by the
+causal-by-absolute-position mask in ``models.attention.paged_attention``).
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
-from repro.models import attention
+from repro.models import attention, rglru, rwkv6
 from repro.models.transformer import Model
+
+# pool-subtree keys holding slot-indexed recurrent state (vs "attn" pages)
+_STATE_KEYS = ("rec", "tm", "cm")
 
 
 def pages_for(n_tokens: int, page_size: int) -> int:
@@ -36,28 +50,54 @@ def pages_for(n_tokens: int, page_size: int) -> int:
     return -(-int(n_tokens) // int(page_size))
 
 
+def unsupported_kinds(model: Model) -> list[str]:
+    """Layer kinds in the model outside the engine's pool coverage."""
+    cfg = model.cfg
+    kinds = tuple(cfg.block_pattern) + tuple(cfg.remainder_pattern)
+    return sorted({k for k in kinds if k not in ("attn", "rglru", "rwkv")})
+
+
+def _layer_pools(cfg, kind: str, n_pages: int, page_size: int, dtype,
+                 capacity: int) -> dict:
+    if kind == "attn":
+        return {"attn": attention.init_paged_kv(cfg, n_pages, page_size,
+                                                dtype)}
+    if kind == "rglru":
+        return {"rec": rglru.init_rglru_state(cfg, capacity, dtype)}
+    if kind == "rwkv":
+        st = rwkv6.init_rwkv_state(cfg, capacity)
+        return {"tm": st["tm"], "cm": st["cm"]}
+    raise NotImplementedError(
+        f"layer kind {kind!r} has no slot resource pool — the engine "
+        "covers attn/rglru/rwkv; use the sequential serving path "
+        "(launch/serve without --engine)")
+
+
 def init_paged_cache(model: Model, n_pages: int, page_size: int,
-                     dtype=None):
-    """Paged KV pool pytree for an attention-only model.
+                     dtype=None, *, capacity: int = 1):
+    """Slot resource pool pytree for any engine-served model.
 
     Mirrors ``Model.init_cache``'s tree (``{"layers": stacked, "rem": ...}``)
     with each attention layer's ring buffer replaced by a
-    ``(n_pages, page_size, kv, hd)`` page pool. One page table indexes every
-    layer's pool identically (all layers cache the same positions), so the
-    engine allocates pages once per request, not per layer.
+    ``(n_pages, page_size, kv, hd)`` page pool and each recurrent layer's
+    state replaced by a ``capacity``-slot state pool. One page table
+    indexes every attention layer's pool identically (all layers cache the
+    same positions), so the engine allocates pages once per request, not
+    per layer. ``capacity`` is the engine's slot-batch size (the leading
+    axis of every state-pool leaf).
     """
     cfg = model.cfg
     if model.paged_step is None:
+        bad = unsupported_kinds(model)
         raise NotImplementedError(
-            f"{cfg.name}: the paged engine covers attention-only "
-            "architectures with a non-int8 KV cache "
-            f"(block_pattern={cfg.block_pattern}, "
-            f"kv_cache_dtype={cfg.kv_cache_dtype!r})")
+            f"{cfg.name}: layer kind(s) {', '.join(map(repr, bad))} have no "
+            "slot resource pool — the engine covers attn/rglru/rwkv; use "
+            "the sequential serving path (launch/serve without --engine)")
     dtype = dtype or jnp.dtype(cfg.compute_dtype)
 
     def one_super():
-        return {f"b{i}_{kind}": {"attn": attention.init_paged_kv(
-                    cfg, n_pages, page_size, dtype)}
+        return {f"b{i}_{kind}": _layer_pools(cfg, kind, n_pages, page_size,
+                                             dtype, capacity)
                 for i, kind in enumerate(cfg.block_pattern)}
 
     stacked = jax.tree.map(
@@ -66,15 +106,65 @@ def init_paged_cache(model: Model, n_pages: int, page_size: int,
     pools = {"layers": stacked}
     rem = cfg.remainder_pattern
     if rem:
-        pools["rem"] = {f"r{i}_{kind}": {"attn": attention.init_paged_kv(
-                            cfg, n_pages, page_size, dtype)}
+        pools["rem"] = {f"r{i}_{kind}": _layer_pools(
+                            cfg, kind, n_pages, page_size, dtype, capacity)
                         for i, kind in enumerate(rem)}
     return pools
 
 
 def paged_cache_bytes(pools) -> int:
-    """Total bytes of the page pools (all layers)."""
+    """Total bytes of the slot resource pools (all layers, both kinds)."""
     return sum(int(x.size) * x.dtype.itemsize for x in jax.tree.leaves(pools))
+
+
+def slot_resource_bytes(pools) -> dict:
+    """Byte split of the pool tree by resource kind.
+
+    Returns ``{"kv_page_bytes": ..., "state_slot_bytes": ...}`` — paged KV
+    pools (the ``"attn"`` subtrees, scales included) vs slot-indexed
+    recurrent state pools (the ``"rec"``/``"tm"``/``"cm"`` subtrees). The
+    two sum to ``paged_cache_bytes(pools)``.
+    """
+    split = {"kv_page_bytes": 0, "state_slot_bytes": 0}
+    for group in ("layers", "rem"):
+        for layer in (pools.get(group) or {}).values():
+            for key, sub in layer.items():
+                kind = "kv_page_bytes" if key == "attn" else "state_slot_bytes"
+                split[kind] += sum(int(x.size) * x.dtype.itemsize
+                                   for x in jax.tree.leaves(sub))
+    return split
+
+
+def zero_state_slots(pools, mask):
+    """Zero the recurrent state of the slots selected by ``mask``.
+
+    mask: (capacity,) bool. Touches only the state-pool subtrees
+    (``rec``/``tm``/``cm``) — paged-KV pages are recycled through the page
+    allocator instead. Slot hygiene on recycle: a finished request's state
+    must not be readable by the slot's next occupant. (The in-step reset in
+    ``transformer._apply_layer_paged`` re-zeroes on first prefill chunk
+    regardless — this keeps the pool clean between occupants.)
+
+    In the stacked ``"layers"`` group the slot axis is axis 1 (leaves are
+    ``(n_super, capacity, ...)``); in ``"rem"`` it is axis 0.
+    """
+    mask = jnp.asarray(mask)
+
+    def zero_group(group, lead):
+        def zero_leaf(l):
+            shape = (1,) * lead + (-1,) + (1,) * (l.ndim - lead - 1)
+            return jnp.where(mask.reshape(shape), jnp.zeros_like(l), l)
+
+        return {key: (jax.tree.map(zero_leaf, sub)
+                      if key in _STATE_KEYS else sub)
+                for key, sub in group.items()}
+
+    out = {"layers": {name: zero_group(layer, 1)
+                      for name, layer in pools["layers"].items()}}
+    if "rem" in pools:
+        out["rem"] = {name: zero_group(layer, 0)
+                      for name, layer in pools["rem"].items()}
+    return out
 
 
 class PageAllocator:

@@ -14,7 +14,10 @@ The tick rules:
 * **Admission** is FCFS. A waiting request is admitted when a slot is free
   and its worst-case page count (``pages_for(prompt + max_new)``) can be
   reserved up front — so a running request can never run out of pages
-  mid-flight and no preemption is ever needed.
+  mid-flight and no preemption is ever needed. Pages are an
+  attention-layer resource: for pure-recurrent models (``reserve_pages=
+  False``) the slot-indexed state pools are O(1) per slot and admission is
+  page-free — a free slot is the only requirement.
 * **Decode first.** Every running slot in the decode phase gets its 1 token
   each tick, off the top of the token budget — new prompts never stall
   running requests.
@@ -94,7 +97,8 @@ class Scheduler:
     def __init__(self, capacity: int, prefill_chunk: int,
                  allocator: PageAllocator, page_size: int, max_pages: int,
                  token_budget: Optional[int] = None,
-                 first_chunk: Optional[int] = None):
+                 first_chunk: Optional[int] = None,
+                 reserve_pages: bool = True):
         if prefill_chunk < 1:
             raise ValueError(f"prefill_chunk must be >= 1, {prefill_chunk}")
         self.capacity = int(capacity)
@@ -110,6 +114,10 @@ class Scheduler:
         self.allocator = allocator
         self.page_size = int(page_size)
         self.max_pages = int(max_pages)
+        # False for models with no attention layers: recurrent state is a
+        # slot-indexed pool (O(1) per slot), so admission reserves nothing
+        # and context length is not page-capped
+        self.reserve_pages = bool(reserve_pages)
         # default: every slot can decode AND one full (jumbo) chunk can
         # prefill — without headroom for first_chunk the jumbo grant would
         # always clamp back to the regular width
@@ -127,12 +135,19 @@ class Scheduler:
 
     # -- admission ----------------------------------------------------------
 
+    def _pages_needed(self, req: Request) -> int:
+        """Worst-case page reservation — 0 when pages aren't the resource
+        (pure-recurrent models: admission is slot-only)."""
+        if not self.reserve_pages:
+            return 0
+        return pages_for(len(req.prompt) + req.max_new_tokens,
+                         self.page_size)
+
     def add(self, req: Request, now: float = 0.0) -> None:
         if len(req.prompt) < 1 or req.max_new_tokens < 1:
             raise ValueError(f"request {req.rid}: need a non-empty prompt "
                              "and max_new_tokens >= 1")
-        need = pages_for(len(req.prompt) + req.max_new_tokens,
-                         self.page_size)
+        need = self._pages_needed(req)
         if need > self.max_pages or need > self.allocator.n_pages - 1:
             raise ValueError(
                 f"request {req.rid} needs {need} pages "
@@ -148,8 +163,7 @@ class Scheduler:
             if self.slots[i] is not None:
                 continue
             req, t_submit = self.waiting[0]
-            need = pages_for(len(req.prompt) + req.max_new_tokens,
-                             self.page_size)
+            need = self._pages_needed(req)
             if need > self.allocator.n_free:
                 return                      # FCFS: don't admit around the head
             self.waiting.popleft()
@@ -258,6 +272,7 @@ class Scheduler:
         self.slots[i] = None
         return {
             "rid": s.req.rid,
+            "slot": i,                      # for engine-side state recycling
             "tokens": np.asarray(s.generated, np.int32),
             "n_prompt": len(s.req.prompt),
             "n_generated": len(s.generated),

@@ -138,11 +138,24 @@ def test_engine_moe_arch_parity(params_by_format):
                                     gen=3)
 
 
-def test_engine_rejects_recurrent_arch():
-    rwkv = build("rwkv6-3b", reduced=True)
-    assert rwkv.paged_step is None
-    with pytest.raises(NotImplementedError):
-        ServeEngine(rwkv, {}, EngineConfig())
+def test_engine_rejects_unknown_layer_kind():
+    """Graceful degrade for layer kinds outside attn/rglru/rwkv coverage:
+    a clear message naming the kind + the sequential-path suggestion, not a
+    raw traceback. (Recurrent archs themselves are covered — see
+    tests/test_engine_recurrent.py.)"""
+    import dataclasses
+
+    from repro.models.model_zoo import get_config
+    from repro.models.transformer import make_model
+
+    cfg = dataclasses.replace(get_config("smollm-360m").reduced(),
+                              block_pattern=("ssm",))
+    fake = make_model(cfg)
+    assert fake.paged_step is None
+    with pytest.raises(NotImplementedError, match=r"'ssm'.*without --engine"):
+        ServeEngine(fake, {}, EngineConfig())
+    with pytest.raises(NotImplementedError, match=r"'ssm'"):
+        init_paged_cache(fake, 8, 4)
 
 
 def test_engine_streaming_callbacks_and_eos(model, params_by_format):
@@ -276,6 +289,50 @@ def test_allocator_reserve_and_errors():
     assert a.n_free == 3
     with pytest.raises(ValueError):
         PageAllocator(1)
+
+
+def test_allocator_churn_free_list_consistent():
+    """Admit/finish/requeue cycles across many ticks: the trash page is
+    never handed out, no page is ever double-owned, and the free list plus
+    in-flight pages always partition {1..n_pages-1}."""
+    rng = np.random.default_rng(0)
+    s = _sched(capacity=3, chunk=4, n_pages=24, max_pages=4)
+    universe = set(range(1, 24))
+    rid = 0
+    for _ in range(8):                        # waves of requests
+        for _ in range(int(rng.integers(1, 5))):
+            s.add(_req(rid, int(rng.integers(1, 9)),
+                       gen=int(rng.integers(1, 4))))
+            rid += 1
+        for _ in range(40):                   # drive ticks with churn checks
+            plan = s.next_tick()
+            if plan is None:
+                break
+            in_flight = [p for sl in s.slots if sl is not None
+                         for p in sl.pages]
+            assert 0 not in in_flight and 0 not in s.allocator._free
+            assert len(in_flight) == len(set(in_flight))      # no dup owners
+            assert set(in_flight).isdisjoint(s.allocator._free)
+            assert set(in_flight) | set(s.allocator._free) == universe
+            s.complete_tick(plan, rng.integers(0, 50, s.capacity))
+    assert not s.has_work()
+    assert s.allocator.n_free == 23           # fully drained -> all free
+
+
+def test_scheduler_recurrent_admission_page_free():
+    """reserve_pages=False (pure-recurrent models): admission needs only a
+    free slot — a request far beyond the page-derived cap is admitted and
+    the allocator is never touched."""
+    s = Scheduler(capacity=2, prefill_chunk=4,
+                  allocator=PageAllocator(4), page_size=4, max_pages=2,
+                  reserve_pages=False)
+    s.add(_req(0, 64, gen=8))                 # 18 pages worth: fine
+    s.add(_req(1, 64, gen=8))
+    plan = s.next_tick()
+    assert plan is not None
+    assert all(sl is not None for sl in s.slots)
+    assert s.allocator.n_free == 3            # untouched
+    np.testing.assert_array_equal(s.page_table(), 0)   # all trash-page
 
 
 def test_scheduler_rejects_oversized_request():
