@@ -14,7 +14,10 @@ Gated metrics, extracted per report:
   instead — only meaningful when baseline and run share a machine class),
 * any row carrying ``speedup_vs_dense=`` in its derived field (the kernel
   lane) — already a same-run ratio against dense XLA, machine-corrected
-  by construction.
+  by construction,
+* any row carrying ``prefix_ttft_speedup=`` (the serve-engine
+  shared-prefix lane) — warm (prefix-cache-hit) vs cold prefill TTFT of
+  the same run, a same-run ratio for the same reason.
 
 Absolute numbers are machine-dependent (the committed baselines were not
 necessarily produced on the same runner class); ratios against the same
@@ -76,6 +79,13 @@ def gated_metrics(report: dict, absolute: bool = False) -> dict:
             v = _field(derived, "speedup_vs_dense")
             if v is not None:
                 out[row["name"]] = (v, f"{v:.3f}x dense")
+                continue
+            # serve-engine shared-prefix lane: warm (cache-hit) vs cold
+            # TTFT of the same run — a same-run ratio, machine-corrected
+            # by construction like the kernel lane
+            v = _field(derived, "prefix_ttft_speedup")
+            if v is not None:
+                out[row["name"]] = (v, f"{v:.3f}x cold-prefill TTFT")
     return out
 
 

@@ -34,6 +34,9 @@ MIXES = {
     "mixed_len": [(8, 16)] * 4 + [(48, 16)] * 4,
     "prefill_heavy": [(64, 8)] * 8,
 }
+# shared-prefix mix: a 96-token shared system prompt + 8-token distinct
+# tails (page_size 16 -> the shared prefix is exactly 6 immutable pages)
+SHARED_PREFIX = dict(n=8, shared_len=96, tail_len=8, gen=8, page_size=16)
 # recurrent archs ride the decode-heavy mix (state pools are O(1) per
 # slot, so decode is where the slot-batching win lives)
 RECURRENT_ARCHS = ("rwkv6-3b", "recurrentgemma-9b")
@@ -99,6 +102,99 @@ def _sequential_tok_s(model, params, requests):
     return sum(g for _, g in requests) / best
 
 
+def _shared_prefix_row(model, params, fmt: str):
+    """Prefix-cache lane: three waves through ONE engine. Wave A warms the
+    compile caches (and populates the radix tree with its own prefix);
+    wave B runs a fresh shared prefix cold (no hits); wave C reuses wave
+    B's prefix with new tails (hits). ``prefix_ttft_speedup`` = cold p50
+    TTFT / warm p50 TTFT — a same-run ratio, so machine speed cancels."""
+    import jax
+
+    from repro.serve.engine import EngineConfig, ServeEngine
+
+    sp = SHARED_PREFIX
+    vocab = model.cfg.vocab
+
+    def rand(tag: str, n: int):
+        key = jax.random.PRNGKey(abs(hash(tag)) % 2**31)
+        return np.asarray(jax.random.randint(key, (n,), 0, vocab), np.int32)
+
+    def wave(prefix_tag: str, tail_tag: str):
+        shared = rand(prefix_tag, sp["shared_len"])
+        return [{"prompt": np.concatenate(
+                     [shared, rand(f"{tail_tag}/{i}", sp["tail_len"])]),
+                 "max_new_tokens": sp["gen"]} for i in range(sp["n"])]
+
+    eng = ServeEngine(model, params, EngineConfig(
+        max_batch=sp["n"], prefill_chunk=16, page_size=sp["page_size"],
+        max_seq_len=sp["shared_len"] + sp["tail_len"] + sp["gen"],
+        prefix_cache=True))
+    eng.run(wave("A", "a"))                       # warm-up (compile) wave
+    cold = eng.run(wave("B", "b"))["stats"]       # fresh prefix: no hits
+    warm = eng.run(wave("B", "c"))["stats"]       # same prefix, new tails
+    assert cold["n_cached_tokens"] == 0, "cold wave unexpectedly hit"
+    assert warm["n_cached_tokens"] > 0, "warm wave missed the cache"
+    hit_rate = warm["n_cached_tokens"] / warm["n_prompt"]
+    speedup = cold["ttft_p50_s"] / max(warm["ttft_p50_s"], 1e-9)
+    return {
+        "name": f"serve_engine/shared_prefix_{fmt}",
+        "us_per_call": 1e6 / max(warm["tok_s"], 1e-9),
+        "derived": (f"prefix_ttft_speedup={speedup:.2f}x,"
+                    f"prefix_hit_rate={hit_rate:.3f},"
+                    f"cold_ttft_p50_ms={cold['ttft_p50_s']*1e3:.1f},"
+                    f"warm_ttft_p50_ms={warm['ttft_p50_s']*1e3:.1f},"
+                    f"cold_ttft_p95_ms={cold['ttft_p95_s']*1e3:.1f},"
+                    f"warm_ttft_p95_ms={warm['ttft_p95_s']*1e3:.1f},"
+                    f"n_cached_tokens={warm['n_cached_tokens']},"
+                    f"engine_tok_s={warm['tok_s']:.1f}")}
+
+
+def _mixed_priority_row(model, params, fmt: str):
+    """Priority/preemption lane: 6 batch-class requests saturate 4 slots,
+    then 2 interactive requests arrive mid-run and preempt — the row
+    records p50/p95 TTFT per class (measured from each request's arrival)
+    and the preemption count."""
+    import jax
+
+    from repro.serve.engine import EngineConfig, ServeEngine
+
+    vocab = model.cfg.vocab
+    prompts = [np.asarray(jax.random.randint(
+                   jax.random.fold_in(jax.random.PRNGKey(77), i), (8,),
+                   0, vocab), np.int32) for i in range(8)]
+    eng = ServeEngine(model, params, EngineConfig(
+        max_batch=4, prefill_chunk=16, page_size=16, max_seq_len=48))
+
+    def one_pass():
+        finished = []
+        preempt0 = eng.scheduler.n_preemptions
+        t0 = time.perf_counter()
+        for i in range(6):
+            eng.submit(prompts[i], 24, priority="batch")
+        for _ in range(6):                 # batch requests get going
+            finished.extend(eng.step())
+        for i in range(6, 8):              # interactive arrivals preempt
+            eng.submit(prompts[i], 8, priority="interactive")
+        while eng.scheduler.has_work():
+            finished.extend(eng.step())
+        s = eng._stats(finished, time.perf_counter() - t0)
+        s["n_preemptions"] -= preempt0     # per-pass (the engine is reused)
+        return s
+
+    one_pass()                             # warm-up: compile both widths
+    s = one_pass()
+    by = {c: s["by_class"].get(c) for c in (0, 2)}
+    parts = [f"engine_tok_s={s['tok_s']:.1f},n_preemptions={s['n_preemptions']}"]
+    for c, label in ((0, "interactive"), (2, "batch")):
+        cs = by[c]
+        parts.append(f"{label}_ttft_p50_ms={cs['ttft_p50_s']*1e3:.1f},"
+                     f"{label}_ttft_p95_ms={cs['ttft_p95_s']*1e3:.1f},"
+                     f"{label}_lat_p50_ms={cs['latency_p50_s']*1e3:.1f}")
+    return {"name": f"serve_engine/mixed_priority_{fmt}",
+            "us_per_call": 1e6 / max(s["tok_s"], 1e-9),
+            "derived": ",".join(parts)}
+
+
 def run():
     import jax
 
@@ -125,6 +221,11 @@ def run():
         s = _engine_stats(model, p, requests)
         seq_tok_s = _sequential_tok_s(model, p, requests)
         rows.append(_row(f"serve_engine/{mix_name}_{fmt}", s, seq_tok_s))
+
+    # request-layer lanes: prefix caching (warm vs cold TTFT on the same
+    # run) and priority preemption (per-class TTFT under slot contention)
+    rows.append(_shared_prefix_row(model, formats["bcsr"], "bcsr"))
+    rows.append(_mixed_priority_row(model, formats["bcsr"], "bcsr"))
 
     # recurrent archs under the engine (slot-state pools): BCSR-compressed,
     # decode-heavy mix — the --assert-speedup gate covers these rows too
@@ -199,14 +300,27 @@ def main(argv=None) -> int:
         bad = [r["name"] for r in rows
                if "dense" not in r["name"]
                and "prefill_heavy" not in r["name"]
+               and "batch_speedup=" in r["derived"]
                and float(re.search(r"batch_speedup=([0-9.]+)x",
                                    r["derived"]).group(1)) <= 1.0]
+        # shared-prefix lane: cache hits must actually happen AND cut TTFT
+        for r in rows:
+            if "prefix_ttft_speedup=" not in r["derived"]:
+                continue
+            spd = float(re.search(r"prefix_ttft_speedup=([0-9.]+)x",
+                                  r["derived"]).group(1))
+            hit = float(re.search(r"prefix_hit_rate=([0-9.]+)",
+                                  r["derived"]).group(1))
+            if spd <= 1.0 or hit <= 0.0:
+                bad.append(f"{r['name']} (ttft speedup {spd}x, "
+                           f"hit rate {hit})")
         if bad:
             print(f"FAIL: batched engine did not beat sequential serving "
-                  f"on {bad}")
+                  f"(or the prefix cache did not cut TTFT) on {bad}")
             return 1
         print("batched compressed engine > sequential on every "
-              "decode-dominated compressed cell")
+              "decode-dominated compressed cell; prefix-cache hits cut "
+              "warm TTFT below cold prefill")
     return 0
 
 

@@ -118,10 +118,10 @@ def main(argv=None):
                     help="serve through the continuous-batching engine "
                          "(serve/engine.py): slot resource pools (paged KV "
                          "for attention incl. int8, slot-indexed state for "
-                         "RWKV/RG-LRU), chunked prefill, FCFS scheduler "
-                         "over a fixed-capacity slot batch — many "
-                         "concurrent mixed-length requests instead of one "
-                         "fixed batch")
+                         "RWKV/RG-LRU), chunked prefill, priority classes "
+                         "with preempt-and-requeue over a fixed-capacity "
+                         "slot batch — many concurrent mixed-length "
+                         "requests instead of one fixed batch")
     ap.add_argument("--max-batch", type=int, default=8,
                     help="engine slot capacity (concurrent requests)")
     ap.add_argument("--prefill-chunk", type=int, default=32,
@@ -143,11 +143,25 @@ def main(argv=None):
     ap.add_argument("--kv-splits", type=int, default=1,
                     help="flash-decode KV-split lanes per slot on the "
                          "pallas backend")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="with --engine: radix-tree prefix caching — "
+                         "requests sharing a prompt prefix share physical "
+                         "KV pages (refcounted, copy-on-write on the first "
+                         "diverging page), so a shared system prompt is "
+                         "prefilled once (attention-layer models only)")
+    ap.add_argument("--priority", default="standard",
+                    help="default scheduling class for --engine requests: "
+                         "interactive | standard | batch, or an int >= 0 "
+                         "(0 = most important; lower classes can be "
+                         "preempted). Per-request override via the "
+                         '--requests file\'s "priority" field')
     ap.add_argument("--requests", default="",
                     help="JSON request mix for --engine: a list of "
                          '{"prompt_len": N, "gen": M} (random prompt) or '
-                         '{"prompt": [ids], "gen": M} entries; default is '
-                         "--batch copies of --prompt-len/--gen")
+                         '{"prompt": [ids], "gen": M} entries, each with an '
+                         'optional "priority" (class name or int >= 0, '
+                         "default --priority); default mix is --batch "
+                         "copies of --prompt-len/--gen")
     ap.add_argument("--parity-check", action="store_true",
                     help="with --engine (greedy): also run every request "
                          "through the sequential generate() path and fail "
@@ -237,11 +251,14 @@ def main(argv=None):
     return out
 
 
-def _load_requests(args, vocab: int) -> list[tuple[np.ndarray, int]]:
-    """(prompt ids, gen) pairs for the engine from --requests JSON (or the
-    --batch/--prompt-len/--gen defaults). Random prompts are seeded per
-    request index so the mix is reproducible."""
+def _load_requests(args, vocab: int) -> list[dict]:
+    """Engine submit() kwargs from --requests JSON (or the --batch/
+    --prompt-len/--gen defaults). Random prompts are seeded per request
+    index so the mix is reproducible; each entry may carry a "priority"
+    (class name or int, default --priority)."""
     import json
+
+    from repro.serve.scheduler import resolve_priority
 
     if args.requests:
         with open(args.requests) as f:
@@ -258,7 +275,9 @@ def _load_requests(args, vocab: int) -> list[tuple[np.ndarray, int]]:
             ids = np.asarray(jax.random.randint(
                 jax.random.fold_in(jax.random.PRNGKey(1234), i),
                 (int(e["prompt_len"]),), 0, vocab), np.int32)
-        out.append((ids, gen))
+        out.append({"prompt": ids, "max_new_tokens": gen,
+                    "priority": resolve_priority(
+                        e.get("priority", args.priority))})
     return out
 
 
@@ -268,7 +287,7 @@ def _run_engine(model, params, args):
     from repro.serve.engine import EngineConfig, ServeEngine
 
     requests = _load_requests(args, model.cfg.vocab)
-    max_seq = max(len(p) + g for p, g in requests)
+    max_seq = max(len(r["prompt"]) + r["max_new_tokens"] for r in requests)
     try:
         engine = ServeEngine(
             model, params,
@@ -278,6 +297,7 @@ def _run_engine(model, params, args):
                          first_chunk=args.first_chunk or None,
                          attn_backend=args.attn_backend,
                          kv_splits=args.kv_splits,
+                         prefix_cache=args.prefix_cache,
                          temperature=args.temperature, top_k=args.top_k,
                          top_p=args.top_p),
             rng=jax.random.PRNGKey(1))
@@ -297,13 +317,25 @@ def _run_engine(model, params, args):
           f"{s['latency_p95_s']*1e3:.0f}ms | {s['n_ticks']} ticks, "
           f"{s['n_prefill_chunks']} prefill chunks | pools "
           f"kv={s['kv_page_bytes']} state={s['state_slot_bytes']} bytes")
+    if len(s["by_class"]) > 1 or s["n_preemptions"]:
+        for c, cs in s["by_class"].items():
+            print(f"  class {c}: {cs['n_requests']} requests "
+                  f"({cs['n_preempted']} preempted) | ttft p50/p95 "
+                  f"{cs['ttft_p50_s']*1e3:.0f}/{cs['ttft_p95_s']*1e3:.0f}ms"
+                  f" | latency p50/p95 {cs['latency_p50_s']*1e3:.0f}/"
+                  f"{cs['latency_p95_s']*1e3:.0f}ms")
+        print(f"  {s['n_preemptions']} preemptions")
+    if args.prefix_cache:
+        print(f"  prefix cache: hit rate {s['prefix_hit_rate']:.1%} "
+              f"({s['n_cached_tokens']} prompt tokens served from cache)")
     print("sample:", out["results"][0][:16].tolist())
     if args.parity_check:
         if args.temperature > 0:
             raise SystemExit("--parity-check needs greedy decoding "
                              "(--temperature 0): generate() and the engine "
                              "draw from different rng streams")
-        for rid, (ids, gen) in enumerate(requests):
+        for rid, r in enumerate(requests):
+            ids, gen = r["prompt"], r["max_new_tokens"]
             ref = np.asarray(generate(model, params, ids[None, :], gen))[0]
             got = out["results"][rid]
             if not np.array_equal(ref, got):

@@ -36,9 +36,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models.transformer import Model
-from repro.serve.paged_kv import (PageAllocator, init_paged_cache, pages_for,
-                                  slot_resource_bytes, unsupported_kinds,
-                                  zero_state_slots)
+from repro.serve.paged_kv import (PageAllocator, copy_page, init_paged_cache,
+                                  pages_for, slot_resource_bytes,
+                                  unsupported_kinds, zero_state_slots)
+from repro.serve.prefix_cache import PrefixCache
 from repro.serve.scheduler import Request, Scheduler
 from repro.serve.step import make_sampler
 
@@ -66,6 +67,13 @@ class EngineConfig:
                    oracle, 'auto' (default) = pallas on TPU, ref elsewhere.
     kv_splits:     flash-decode KV-split lanes per slot on the pallas
                    backend (1 = no split).
+    prefix_cache:  radix-tree prefix caching: requests sharing a prompt
+                   prefix share physical KV pages (refcounted, COW on the
+                   first diverging page) — attention-layer models only
+                   (recurrent state is not position-sliceable).
+    class_shares:  optional ((class, weight), ...) pairs overriding the
+                   per-priority-class prefill token-budget shares
+                   (default: class c weighs 2^-c).
     """
     max_batch: int = 8
     prefill_chunk: int = 32
@@ -76,6 +84,8 @@ class EngineConfig:
     first_chunk: Optional[int] = None
     attn_backend: str = "auto"
     kv_splits: int = 1
+    prefix_cache: bool = False
+    class_shares: Optional[tuple] = None
     temperature: float = 0.0
     top_k: int = 0
     top_p: float = 1.0
@@ -116,13 +126,23 @@ class ServeEngine:
                                       capacity=config.max_batch)
         self.pool_bytes = slot_resource_bytes(self.pools)
         self.allocator = PageAllocator(config.total_pages)
+        self.prefix_cache = None
+        if config.prefix_cache:
+            if self.has_state:
+                raise NotImplementedError(
+                    f"{model.cfg.name}: --prefix-cache shares paged KV, but "
+                    "recurrent (rglru/rwkv) state is not position-sliceable "
+                    "— prefix caching covers attention-only models")
+            self.prefix_cache = PrefixCache(self.allocator, config.page_size)
         self.scheduler = Scheduler(
             capacity=config.max_batch, prefill_chunk=config.prefill_chunk,
             allocator=self.allocator, page_size=config.page_size,
             max_pages=config.pages_per_slot,
             token_budget=config.token_budget,
             first_chunk=config.first_chunk,
-            reserve_pages=self.has_attn)
+            paged=self.has_attn,
+            prefix_cache=self.prefix_cache,
+            class_shares=dict(config.class_shares or ()))
         sampler = sampler or make_sampler(config.temperature, config.top_k,
                                           config.top_p)
         self._rng = rng if rng is not None else jax.random.PRNGKey(0)
@@ -146,18 +166,23 @@ class ServeEngine:
         # next occupant (one compiled shape — the mask is (capacity,) bool)
         self._zero_slots = (jax.jit(zero_state_slots, donate_argnums=(0,))
                             if self.has_state else None)
+        # COW boundary-page copy for mid-page prefix-cache hits (scalar
+        # src/dst: one compiled shape no matter which pages are copied)
+        self._copy_page = jax.jit(copy_page, donate_argnums=(0,))
 
     # -- request intake -----------------------------------------------------
 
     def submit(self, prompt, max_new_tokens: int, eos_id: Optional[int] = None,
-               stream: Optional[Callable] = None) -> int:
+               stream: Optional[Callable] = None, priority: int = 1) -> int:
         """Queue one request; returns its rid. ``stream(rid, token, done)``
-        is invoked for every generated token as it is produced."""
+        is invoked for every generated token as it is produced;
+        ``priority`` is the scheduling class (0 = most important, or an
+        ``PRIORITY_CLASSES`` name — lower classes can be preempted)."""
         rid = self._next_rid
         self._next_rid += 1
         req = Request(rid=rid, prompt=np.asarray(prompt, np.int32).ravel(),
                       max_new_tokens=int(max_new_tokens), eos_id=eos_id,
-                      stream=stream)
+                      stream=stream, priority=priority)
         self.scheduler.add(req, now=time.perf_counter())
         return rid
 
@@ -168,6 +193,15 @@ class ServeEngine:
         plan = self.scheduler.next_tick(now=time.perf_counter())
         if plan is None:
             return []
+        # COW copies queued by this tick's admissions land BEFORE the step
+        # (prefill may overwrite the copy from the divergence point); the
+        # pinned source page is released once the copy is issued — ops on
+        # the pools are ordered by data dependency, re-allocation can only
+        # happen at the next host-side tick
+        for src, dst in self.scheduler.drain_copies():
+            self.pools = self._copy_page(self.pools, jnp.int32(src),
+                                         jnp.int32(dst))
+            self.allocator.free([src])
         self.tick_widths.add(plan.width)
         self._rng, sub = jax.random.split(self._rng)
         sampled, _, self.pools = self._step(
@@ -177,11 +211,15 @@ class ServeEngine:
         self.n_ticks += 1
         finished = self.scheduler.complete_tick(plan, np.asarray(sampled),
                                                 now=time.perf_counter())
-        if finished and self._zero_slots is not None:
+        if self._zero_slots is not None:
+            # zero the recurrent state of slots vacated this tick (finish
+            # or preemption) unless a new occupant landed already — the
+            # in-step position-0 reset covers that occupant regardless
             mask = np.zeros(self.config.max_batch, bool)
-            for r in finished:
-                mask[r["slot"]] = True
-            self.pools = self._zero_slots(self.pools, jnp.asarray(mask))
+            for i in self.scheduler.drain_freed_slots():
+                mask[i] = self.scheduler.slots[i] is None
+            if mask.any():
+                self.pools = self._zero_slots(self.pools, jnp.asarray(mask))
         return finished
 
     def run(self, requests=None) -> dict:
@@ -212,23 +250,39 @@ class ServeEngine:
                 "stats": stats}
 
     def _stats(self, finished: list[dict], wall: float) -> dict:
-        """Throughput/latency summary of a drained run."""
+        """Throughput/latency summary of a drained run, with per-priority-
+        class SLO accounting (p50/p95 TTFT + latency per class) and the
+        prefix-cache hit rate."""
         n_new = sum(r["n_generated"] for r in finished)
-        ttft = [r["t_first"] - r["t_submit"] for r in finished
-                if r["t_first"] is not None]
-        lat = [r["t_done"] - r["t_submit"] for r in finished]
 
         def pct(xs, q):
             return float(np.percentile(xs, q)) if xs else 0.0
 
-        return {
+        def slo(records) -> dict:
+            ttft = [r["t_first"] - r["t_submit"] for r in records
+                    if r["t_first"] is not None]
+            lat = [r["t_done"] - r["t_submit"] for r in records]
+            return {
+                "n_requests": len(records),
+                "n_preempted": sum(r["n_preempted"] for r in records),
+                "ttft_p50_s": pct(ttft, 50), "ttft_p95_s": pct(ttft, 95),
+                "latency_p50_s": pct(lat, 50), "latency_p95_s": pct(lat, 95),
+            }
+
+        stats = {
             "n_requests": len(finished),
             "n_generated": int(n_new),
             "n_prompt": int(sum(r["n_prompt"] for r in finished)),
+            "n_cached_tokens": int(sum(r["n_cached"] for r in finished)),
+            "n_preemptions": self.scheduler.n_preemptions,
+            "prefix_hit_rate": (self.prefix_cache.hit_rate
+                                if self.prefix_cache is not None else 0.0),
             "kv_page_bytes": self.pool_bytes["kv_page_bytes"],
             "state_slot_bytes": self.pool_bytes["state_slot_bytes"],
             "wall_s": wall,
             "tok_s": n_new / wall if wall > 0 else 0.0,
-            "ttft_p50_s": pct(ttft, 50), "ttft_p95_s": pct(ttft, 95),
-            "latency_p50_s": pct(lat, 50), "latency_p95_s": pct(lat, 95),
+            **slo(finished),
+            "by_class": {c: slo([r for r in finished if r["priority"] == c])
+                         for c in sorted({r["priority"] for r in finished})},
         }
+        return stats

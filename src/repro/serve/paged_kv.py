@@ -167,15 +167,51 @@ def zero_state_slots(pools, mask):
     return out
 
 
+def copy_page(pools, src, dst):
+    """Copy page ``src`` onto page ``dst`` in every attention pool leaf
+    (K, V, and int8 scales) — the copy-on-write step behind prefix-cache
+    hits that end mid-page: the new request maps the cached full pages
+    read-only and gets a private copy of the partially-matching boundary
+    page, which its own prefill then overwrites from the divergence point.
+    ``src``/``dst`` are scalars, so this compiles exactly once regardless
+    of which pages are copied.
+
+    In the stacked ``"layers"`` group the page axis is axis 1 (leaves are
+    ``(n_super, n_pages, page_size, ...)``); in ``"rem"`` it is axis 0.
+    """
+    src = jnp.asarray(src, jnp.int32)
+    dst = jnp.asarray(dst, jnp.int32)
+
+    def cp_group(group, lead):
+        def cp_leaf(l):
+            if lead == 0:
+                return l.at[dst].set(l[src])
+            return l.at[:, dst].set(l[:, src])
+
+        return {key: (jax.tree.map(cp_leaf, sub) if key == "attn" else sub)
+                for key, sub in group.items()}
+
+    out = {"layers": {name: cp_group(layer, 1)
+                      for name, layer in pools["layers"].items()}}
+    if "rem" in pools:
+        out["rem"] = {name: cp_group(layer, 0)
+                      for name, layer in pools["rem"].items()}
+    return out
+
+
 class PageAllocator:
-    """Host-side free-list page allocator. Page 0 is reserved (trash page).
+    """Host-side refcounted free-list page allocator. Page 0 is reserved
+    (trash page) and can never be allocated, shared, or freed.
 
     ``alloc(n)`` pops ``n`` page ids (lowest-numbered first — keeps page
-    tables dense and reproducible) or raises ``MemoryError`` without
-    allocating anything; ``free(pages)`` returns them. The engine reserves
-    a request's worst-case page count at admission, so a running request
-    can never hit an out-of-pages condition mid-flight (no preemption
-    needed).
+    tables dense and reproducible) at refcount 1, or raises ``MemoryError``
+    without allocating anything. Pages are shared by ``incref`` (the prefix
+    cache maps one physical page into many requests' page tables — and
+    holds its own reference so cached pages survive their writer) and
+    released by ``free``/``decref``: a page returns to the free list only
+    when its last owner lets go. ``refcount`` is the test suite's invariant
+    hook: at every tick it must equal the number of distinct owners (slot
+    page tables + radix-tree nodes + in-flight COW sources).
     """
 
     def __init__(self, n_pages: int):
@@ -185,18 +221,41 @@ class PageAllocator:
         self.n_pages = int(n_pages)
         # descending so .pop() hands out the lowest id first
         self._free = list(range(self.n_pages - 1, 0, -1))
+        self._rc: dict[int, int] = {}      # page -> refcount (allocated only)
 
     @property
     def n_free(self) -> int:
         return len(self._free)
 
+    def refcount(self, page: int) -> int:
+        return self._rc.get(int(page), 0)
+
     def alloc(self, n: int) -> list[int]:
         if n > len(self._free):
             raise MemoryError(f"requested {n} pages, {len(self._free)} free")
-        return [self._free.pop() for _ in range(n)]
+        pages = [self._free.pop() for _ in range(n)]
+        for p in pages:
+            self._rc[p] = 1
+        return pages
+
+    def incref(self, page: int) -> None:
+        p = int(page)
+        assert p in self._rc, f"incref on unallocated page {p}"
+        self._rc[p] += 1
 
     def free(self, pages) -> None:
+        """Drop one reference per page; last owner returns it to the free
+        list. Freeing an unallocated (or trash) page is a hard error — the
+        double-free invariant the stress suite leans on."""
         for p in pages:
             p = int(p)
             assert 0 < p < self.n_pages, p
-            self._free.append(p)
+            rc = self._rc.get(p)
+            assert rc is not None, f"double free of page {p}"
+            if rc == 1:
+                del self._rc[p]
+                self._free.append(p)
+            else:
+                self._rc[p] = rc - 1
+
+    decref = free

@@ -210,3 +210,46 @@ def test_int8_engine_serves_and_halves_pool_bytes(int8_model):
     fp_bytes = paged_cache_bytes(init_paged_cache(fp_model, 9, 4))
     hd = model.cfg.resolved_head_dim
     assert int8_bytes == pytest.approx(fp_bytes * (1 + 4 / hd) / 4, rel=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Priority preemption on recurrent-state slots
+# ---------------------------------------------------------------------------
+
+def test_recurrent_preempt_resume_parity(arch_setup):
+    """A batch-class recurrent request preempted mid-decode by an
+    interactive arrival (capacity 1) loses its state slot entirely —
+    recurrent state is not pageable, so the freed slot is zeroed and the
+    resume re-prefills prompt + generated from scratch. Both requests
+    must still match uninterrupted generate() token for token."""
+    arch, model, params = arch_setup
+    prompts = _prompts([9, 6], model.cfg.vocab, seed=13)
+    eng = ServeEngine(model, params,
+                      EngineConfig(max_batch=1, prefill_chunk=8, page_size=4,
+                                   max_seq_len=24))
+    finished = []
+    eng.submit(prompts[0], 7, priority="batch")
+    for _ in range(4):                       # prefill + a few decode ticks
+        finished.extend(eng.step())
+    eng.submit(prompts[1], 3, priority="interactive")
+    while eng.scheduler.has_work():
+        finished.extend(eng.step())
+    recs = {r["rid"]: r for r in finished}
+    assert eng.scheduler.n_preemptions >= 1
+    assert recs[0]["n_preempted"] >= 1
+    assert [r["rid"] for r in finished].index(1) < \
+        [r["rid"] for r in finished].index(0)
+    for rid, gen in ((0, 7), (1, 3)):
+        ref = np.asarray(generate(model, params,
+                                  prompts[rid][None, :], gen))[0]
+        np.testing.assert_array_equal(recs[rid]["tokens"], ref,
+                                      err_msg=f"{arch} request {rid}")
+
+
+def test_recurrent_rejects_prefix_cache(arch_setup):
+    """Prefix caching shares position-sliceable KV pages; recurrent state
+    is a single running summary, so the engine must refuse the combination
+    with a clear error instead of serving wrong tokens."""
+    arch, model, params = arch_setup
+    with pytest.raises(NotImplementedError, match="prefix-cache"):
+        ServeEngine(model, params, EngineConfig(prefix_cache=True))

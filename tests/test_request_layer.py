@@ -1,0 +1,442 @@
+"""Request-layer invariant suite: refcounted PageAllocator, radix-tree
+PrefixCache, and the priority/preemption Scheduler — no model, pure
+host-side mechanics.
+
+The load-bearing guarantees:
+  * allocator refcounts: shared pages free only at the last owner, double
+    frees and trash-page frees are hard errors,
+  * radix tree: longest-prefix match at page granularity capped at
+    ``len(prompt)-1`` (the last token must run — its logits seed
+    sampling), mid-page matches surface a pinned COW source, only
+    prompt-immutable pages are ever inserted, eviction touches only
+    leaves the tree solely owns (LRU first),
+  * priority scheduling: strictly-more-important arrivals preempt the
+    least-important youngest slot, preempted requests requeue at the
+    FRONT of their class with generated tokens kept and resume by
+    re-prefilling prompt + generated as one seq, page shortfall preempts
+    (or defers) rather than deadlocks, per-class prefill quotas follow
+    ``class_shares``,
+  * the seeded ~200-tick stress trace: mixed admit/preempt/finish churn
+    with prefix sharing and COW, checked after EVERY tick for the global
+    invariants — refcount == #owners (slot page tables + radix tree) for
+    every page, trash page 0 never owned, free list and allocated pages
+    partition {1..n_pages-1}, and a fully drained system leaks nothing.
+"""
+import numpy as np
+import pytest
+
+from repro.serve.paged_kv import PageAllocator, pages_for
+from repro.serve.prefix_cache import PrefixCache
+from repro.serve.scheduler import (PRIORITY_CLASSES, Request, Scheduler,
+                                   resolve_priority)
+
+PS = 4  # page size used throughout
+
+
+def _sched(capacity=2, chunk=4, n_pages=64, max_pages=8, budget=None,
+           first_chunk=None, prefix_cache=False, class_shares=None):
+    alloc = PageAllocator(n_pages)
+    pc = PrefixCache(alloc, PS) if prefix_cache else None
+    return Scheduler(capacity=capacity, prefill_chunk=chunk,
+                     allocator=alloc, page_size=PS, max_pages=max_pages,
+                     token_budget=budget, first_chunk=first_chunk,
+                     prefix_cache=pc, class_shares=class_shares)
+
+
+def _req(rid, plen, gen=4, prompt=None, **kw):
+    if prompt is None:
+        prompt = np.arange(plen, dtype=np.int32)
+    return Request(rid=rid, prompt=np.asarray(prompt, np.int32),
+                   max_new_tokens=gen, **kw)
+
+
+def _drive(s, ticks=1, token=7):
+    """Run ``ticks`` ticks feeding ``token`` back to every sampled slot,
+    honouring the engine contract (drain copies, release pinned sources)."""
+    out = []
+    for _ in range(ticks):
+        plan = s.next_tick()
+        if plan is None:
+            break
+        for src, _ in s.drain_copies():
+            s.allocator.free([src])
+        out += s.complete_tick(plan, np.full(s.capacity, token))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# PageAllocator refcounts
+# ---------------------------------------------------------------------------
+
+def test_allocator_refcount_shared_page_lifecycle():
+    a = PageAllocator(8)
+    (p,) = a.alloc(1)
+    assert a.refcount(p) == 1
+    a.incref(p)                               # second owner (e.g. the tree)
+    a.incref(p)                               # third (e.g. a COW pin)
+    assert a.refcount(p) == 3
+    a.free([p])
+    a.free([p])
+    assert a.refcount(p) == 1 and a.n_free == 6   # still owned once
+    a.free([p])
+    assert a.refcount(p) == 0 and a.n_free == 7   # last owner released it
+
+
+def test_allocator_hard_errors():
+    a = PageAllocator(8)
+    (p,) = a.alloc(1)
+    a.free([p])
+    with pytest.raises(AssertionError, match="double free"):
+        a.free([p])
+    with pytest.raises(AssertionError):
+        a.free([0])                           # the trash page is untouchable
+    with pytest.raises(AssertionError):
+        a.incref(5)                           # unallocated
+
+
+# ---------------------------------------------------------------------------
+# PrefixCache: match / insert / COW / evict
+# ---------------------------------------------------------------------------
+
+def _cache(n_pages=32):
+    a = PageAllocator(n_pages)
+    return PrefixCache(a, PS), a
+
+
+def test_prefix_match_empty_tree_and_insert_roundtrip():
+    pc, a = _cache()
+    prompt = np.arange(12, dtype=np.int32)    # 3 full pages
+    assert pc.match(prompt) == ([], 0, None)
+    pages = a.alloc(3)
+    assert pc.insert(prompt, pages) == 3
+    for p in pages:
+        assert a.refcount(p) == 2             # writer + tree
+    a.free(pages)                             # the writing request finishes
+    got, n_cached, cow = pc.match(prompt)
+    # cap at len-1: the 3rd page covers tokens 8..11, but token 11 must
+    # run, so only 2 full pages are shared and page 3 comes back as the
+    # COW source for the 3 remaining matchable tokens (8, 9, 10)
+    assert got == pages[:2] and n_cached == 11 and cow == pages[2]
+    assert a.refcount(cow) == 2               # pinned for the copy
+    assert all(a.refcount(p) == 2 for p in got)
+
+
+def test_prefix_match_mid_page_divergence_cow():
+    pc, a = _cache()
+    cached = np.asarray([0, 1, 2, 3, 4, 5, 6, 7], np.int32)
+    pages = a.alloc(2)
+    pc.insert(cached, pages)
+    a.free(pages)
+    # diverges at token 6: one full shared page + 2 matching head tokens
+    # of the second page -> COW
+    got, n_cached, cow = pc.match(
+        np.asarray([0, 1, 2, 3, 4, 5, 99, 98, 97, 96], np.int32))
+    assert got == [pages[0]] and n_cached == 6 and cow == pages[1]
+    # diverges at token 0 of the second page: no COW source
+    got, n_cached, cow = pc.match(
+        np.asarray([0, 1, 2, 3, 99, 98, 97, 96], np.int32))
+    assert got == [pages[0]] and n_cached == 4 and cow is None
+
+
+def test_prefix_insert_rejects_mutable_pages():
+    pc, a = _cache()
+    with pytest.raises(AssertionError):
+        # 2 pages cover 8 tokens but the prompt is 7 long: the second
+        # page's tail will still be written by generated tokens
+        pc.insert(np.arange(7, dtype=np.int32), a.alloc(2))
+
+
+def test_prefix_evict_lru_leaves_only():
+    pc, a = _cache()
+    old = np.arange(8, dtype=np.int32)
+    new = np.arange(100, 108, dtype=np.int32)
+    p_old, p_new = a.alloc(2), a.alloc(2)
+    pc.insert(old, p_old)
+    pc.insert(new, p_new)
+    a.free(p_old + p_new)                     # the tree is now sole owner
+    assert pc.n_cached_pages == 4
+    pc.evict(1)                               # coldest leaf: old's 2nd page
+    assert pc.n_cached_pages == 3
+    assert a.refcount(p_old[1]) == 0 and a.refcount(p_old[0]) == 1
+    pc.evict(1)                               # its parent became a leaf
+    assert a.refcount(p_old[0]) == 0
+    assert sorted(pc.cached_pages()) == sorted(p_new)
+    # a page pinned by a running request is never evicted
+    got, _, cow = pc.match(np.concatenate([new, [1, 2]]).astype(np.int32))
+    assert pc.evict(10) == 0 if cow else True  # all remaining pages shared
+    assert set(pc.cached_pages()) == set(p_new)
+
+
+def test_prefix_hit_rate_accounting():
+    pc, a = _cache()
+    prompt = np.arange(9, dtype=np.int32)     # 2 full pages + 1 token
+    pages = a.alloc(2)
+    pc.insert(prompt, pages)
+    a.free(pages)
+    pc.match(prompt)                          # 8 of 9 tokens hit
+    pc.match(np.arange(50, 59, dtype=np.int32))   # miss
+    assert pc.n_queries == 2 and pc.n_hit_queries == 1
+    assert pc.tokens_hit == 8 and pc.tokens_queried == 18
+    assert pc.hit_rate == pytest.approx(8 / 18)
+
+
+# ---------------------------------------------------------------------------
+# Priority classes + preemption
+# ---------------------------------------------------------------------------
+
+def test_resolve_priority_names_and_errors():
+    assert resolve_priority("interactive") == 0
+    assert resolve_priority("batch") == PRIORITY_CLASSES["batch"]
+    assert resolve_priority(5) == 5
+    with pytest.raises(ValueError):
+        resolve_priority("urgent")
+    with pytest.raises(ValueError):
+        resolve_priority(-1)
+
+
+def test_admission_preempts_strictly_less_important():
+    s = _sched(capacity=1, chunk=8)
+    s.add(_req(0, 4, gen=8, priority="batch"))
+    _drive(s, 3)                              # batch prefills + decodes
+    batch_slot = s.slots[0]
+    assert batch_slot.req.rid == 0 and len(batch_slot.generated) >= 1
+    gen_before = list(batch_slot.generated)
+
+    s.add(_req(1, 4, gen=2, priority="interactive"))
+    plan = s.next_tick()                      # interactive preempts
+    assert s.slots[0].req.rid == 1
+    assert s.n_preemptions == 1
+    # the victim requeued at the FRONT of its class, generated kept
+    entry = s.waiting[PRIORITY_CLASSES["batch"]][0]
+    assert entry.req.rid == 0 and entry.generated == gen_before
+    assert entry.n_preempted == 1
+    s.complete_tick(plan, np.full(1, 7))
+    _drive(s, 30)
+    assert not s.has_work()
+    # resume re-prefilled prompt + generated as one seq
+    assert s.n_preemptions == 1
+
+
+def test_equal_class_never_preempts():
+    s = _sched(capacity=1, chunk=8)
+    s.add(_req(0, 4, gen=6, priority="standard"))
+    _drive(s, 2)
+    s.add(_req(1, 4, gen=2, priority="standard"))
+    s.next_tick()
+    assert s.slots[0].req.rid == 0            # FCFS within a class holds
+    assert s.n_preemptions == 0
+
+
+def test_resume_seq_is_prompt_plus_generated():
+    s = _sched(capacity=1, chunk=8)
+    s.add(_req(0, 6, gen=8, priority="batch"))
+    _drive(s, 4, token=9)                     # a few decoded tokens
+    gen_before = list(s.slots[0].generated)
+    assert gen_before
+    s.add(_req(1, 4, gen=1, priority="interactive"))
+    _drive(s, 3, token=9)                     # preempt, serve, finish rid 1
+    assert not any(sl is not None and sl.req.rid == 1 for sl in s.slots) \
+        or s.slots[0].req.rid == 0
+    _drive(s, 1, token=9)
+    resumed = s.slots[0]
+    assert resumed.req.rid == 0
+    np.testing.assert_array_equal(
+        resumed.seq, np.concatenate([np.arange(6), gen_before]))
+    assert resumed.n_gen_at_admit == len(gen_before)
+    # ctx accounting: decode resumes exactly where the preemption cut it
+    done = _drive(s, 30, token=9)
+    assert done and done[0]["rid"] == 0
+    assert done[0]["n_generated"] == 8
+    assert done[0]["n_preempted"] == 1
+
+
+def test_page_shortfall_preempts_youngest_less_important():
+    # 8 usable pages; two batch requests at 3 pages each fit, then an
+    # interactive long request needs 6 -> the youngest batch slot dies
+    s = _sched(capacity=3, chunk=8, n_pages=9, max_pages=6)
+    s.add(_req(0, 8, gen=4, priority="batch"))
+    s.add(_req(1, 8, gen=4, priority="batch"))
+    _drive(s, 2)
+    assert all(s.slots[i] is not None for i in (0, 1))
+    s.add(_req(2, 20, gen=4, priority="interactive"))
+    _drive(s, 3)
+    assert s.n_preemptions >= 1
+    rids = {sl.req.rid for sl in s.slots if sl is not None}
+    assert 2 in rids                          # the interactive one is in
+    done = _drive(s, 60)
+    assert not s.has_work()
+    assert s.allocator.n_free == 8            # nothing leaked
+
+
+def test_prefill_quota_class_shares():
+    # two prefilling classes, budget 12 after decode: default shares
+    # (2^-0 : 2^-1) give interactive 8 of 12, standard 4
+    s = _sched(capacity=2, chunk=8, budget=12)
+    s.add(_req(0, 20, gen=2, priority="interactive"))
+    s.add(_req(1, 20, gen=2, priority="standard"))
+    plan = s.next_tick()
+    assert plan.n_tokens.tolist() == [8, 4]
+    # explicit shares override: a flat split halves the budget evenly
+    s2 = _sched(capacity=2, chunk=8, budget=12,
+                class_shares={0: 1.0, 1: 1.0})
+    s2.add(_req(0, 20, gen=2, priority="interactive"))
+    s2.add(_req(1, 20, gen=2, priority="standard"))
+    assert s2.next_tick().n_tokens.tolist() == [6, 6]
+
+
+def test_page_famine_emits_empty_plan_not_deadlock():
+    # one slot holds every usable page; a same-class slot cannot steal
+    # them -> its grant defers (n_tokens 0) until the holder finishes
+    s = _sched(capacity=2, chunk=8, n_pages=5, max_pages=4, budget=16)
+    s.add(_req(0, 13, gen=3))
+    _drive(s, 2)                              # rid 0 holds all 4 pages
+    assert len(s.slots[0].pages) == 4
+    s.add(_req(1, 13, gen=3))
+    plan = s.next_tick()
+    assert s.slots[1] is not None             # admitted (optimistic) ...
+    assert plan.n_tokens[1] == 0              # ... but granted nothing
+    done = _drive(s, 40)
+    assert not s.has_work()                   # both finish eventually
+    assert {d["rid"] for d in done} == {0, 1}
+
+
+def test_prefix_cache_hit_starts_prefill_past_cached_tokens():
+    s = _sched(capacity=2, chunk=8, prefix_cache=True)
+    prompt = np.arange(10, dtype=np.int32)    # 2 full pages + 2 tokens
+    s.add(_req(0, 0, gen=1, prompt=prompt))
+    _drive(s, 3)                              # finish; tree keeps 2 pages
+    assert not s.has_work()
+    assert s.prefix_cache.n_cached_pages == 2
+    s.add(_req(1, 0, gen=1, prompt=prompt))
+    plan = s.next_tick()
+    sl = s.slots[0]
+    assert sl.n_cached == 8 and sl.n_prefilled == 8
+    assert plan.start_pos[0] == 8             # prefill resumes mid-prompt
+    assert plan.n_tokens[0] == 2
+    assert s.allocator.refcount(sl.pages[0]) == 2   # shared with the tree
+
+
+def test_cow_copy_queued_and_pinned_until_drained():
+    s = _sched(capacity=2, chunk=8, prefix_cache=True)
+    s.add(_req(0, 8, gen=1))
+    _drive(s, 3)
+    assert not s.has_work()
+    # diverge inside page 2 -> COW: a private dst + a pinned src
+    s.add(_req(1, 0, gen=1,
+               prompt=np.asarray([0, 1, 2, 3, 4, 5, 99, 98], np.int32)))
+    s.next_tick()
+    copies = s.drain_copies()
+    assert len(copies) == 1
+    src, dst = copies[0]
+    assert s.allocator.refcount(src) == 2     # tree + the pin
+    assert s.allocator.refcount(dst) == 1 and dst in s.slots[0].pages
+    s.allocator.free([src])                   # engine releases after copying
+    assert s.allocator.refcount(src) == 1     # tree still owns it
+
+
+# ---------------------------------------------------------------------------
+# The seeded stress trace: every-tick invariants under churn
+# ---------------------------------------------------------------------------
+
+def _owned_pages(s):
+    """page -> #owners from the scheduler's own books: slot page tables
+    plus the radix tree. (COW pins are transient — the trace drains them
+    within the tick, like the engine does.)"""
+    owners: dict[int, int] = {}
+    for sl in s.slots:
+        if sl is not None:
+            assert len(sl.pages) == len(set(sl.pages))   # no dup in a table
+            for p in sl.pages:
+                owners[p] = owners.get(p, 0) + 1
+    if s.prefix_cache is not None:
+        for p in s.prefix_cache.cached_pages():
+            owners[p] = owners.get(p, 0) + 1
+    return owners
+
+
+def _check_invariants(s, n_pages):
+    owners = _owned_pages(s)
+    free = set(s.allocator._free)
+    assert 0 not in owners and 0 not in free          # trash page untouched
+    for p in range(1, n_pages):
+        assert s.allocator.refcount(p) == owners.get(p, 0), \
+            f"page {p}: refcount {s.allocator.refcount(p)} != " \
+            f"{owners.get(p, 0)} owners"
+    assert free.isdisjoint(owners)                    # no free-yet-owned
+    assert free | set(owners) == set(range(1, n_pages))   # no limbo pages
+
+
+def test_stress_trace_invariants_every_tick():
+    """~200 ticks of seeded churn: random admissions across 3 priority
+    classes with shared prefixes (radix hits + COW), random EOS, page
+    pressure forcing preemptions — the allocator/scheduler/tree invariants
+    hold after every tick and a drained system frees everything."""
+    rng = np.random.default_rng(42)
+    N_PAGES, CAP = 14, 2
+    s = _sched(capacity=CAP, chunk=8, n_pages=N_PAGES, max_pages=5,
+               prefix_cache=True)
+    # small prompt-prefix pool -> real prefix sharing across requests
+    prefixes = [rng.integers(0, 40, 8).astype(np.int32) for _ in range(3)]
+    rid, finished, submitted = 0, [], 0
+    for tick in range(220):
+        if tick < 180 and rng.random() < 0.5:
+            prefix = prefixes[rng.integers(len(prefixes))]
+            tail = rng.integers(0, 40, rng.integers(1, 6)).astype(np.int32)
+            s.add(Request(rid=rid,
+                          prompt=np.concatenate([prefix, tail]),
+                          max_new_tokens=int(rng.integers(1, 5)),
+                          eos_id=3,
+                          priority=int(rng.integers(0, 3))))
+            rid += 1
+            submitted += 1
+        plan = s.next_tick()
+        if plan is None:
+            if submitted == len(finished) and tick >= 180:
+                break
+            continue
+        for src, _ in s.drain_copies():       # the engine contract
+            s.allocator.free([src])
+        finished += s.complete_tick(
+            plan, rng.integers(0, 10, CAP))   # token 3 == EOS sometimes
+        _check_invariants(s, N_PAGES)
+    assert not s.has_work()                   # the trace drained
+    assert len(finished) == submitted == rid
+    assert submitted > 40
+    # churn actually exercised the interesting paths
+    assert s.n_preemptions > 0, "trace never preempted"
+    assert s.prefix_cache.tokens_hit > 0, "trace never hit the cache"
+    assert any(f["n_preempted"] > 0 for f in finished)
+    # drained: only the tree owns pages; evicting it frees every page
+    _check_invariants(s, N_PAGES)
+    assert s.allocator.n_free == N_PAGES - 1 - s.prefix_cache.n_cached_pages
+    s.prefix_cache.evict(N_PAGES)
+    assert s.allocator.n_free == N_PAGES - 1  # zero leaks end to end
+
+
+def test_stress_trace_no_prefix_cache_partition_invariant():
+    """Same churn without the tree: free list + slot pages must partition
+    the page universe exactly (the PR 5 invariant, now under preemption)."""
+    rng = np.random.default_rng(7)
+    N_PAGES, CAP = 16, 3
+    s = _sched(capacity=CAP, chunk=4, n_pages=N_PAGES, max_pages=4)
+    rid, finished, submitted = 0, [], 0
+    for tick in range(200):
+        if tick < 160 and rng.random() < 0.4:
+            s.add(_req(rid, int(rng.integers(1, 12)),
+                       gen=int(rng.integers(1, 5)),
+                       priority=int(rng.integers(0, 3))))
+            rid += 1
+            submitted += 1
+        plan = s.next_tick()
+        if plan is None:
+            continue
+        finished += s.complete_tick(plan, rng.integers(0, 50, CAP))
+        _check_invariants(s, N_PAGES)
+    done = True
+    while s.has_work():                       # drain the tail
+        plan = s.next_tick()
+        finished += s.complete_tick(plan, rng.integers(0, 50, CAP))
+        _check_invariants(s, N_PAGES)
+    assert len(finished) == submitted > 30
+    assert s.n_preemptions > 0
+    assert s.allocator.n_free == N_PAGES - 1

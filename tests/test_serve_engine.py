@@ -192,7 +192,9 @@ def test_engine_streaming_callbacks_and_eos(model, params_by_format):
 
 def test_engine_page_pressure_queues_fcfs(model, params_by_format):
     """With pages for only ~2 concurrent requests, 4 requests still all
-    complete (FCFS, slots/pages recycled) with unchanged tokens."""
+    complete with unchanged tokens: optimistic admission takes all four
+    slots, page shortfall preempts the youngest, preempted requests
+    resume (prompt + generated re-prefilled) and match generate()."""
     params = params_by_format["bcsr"]
     lens = [5, 9, 5, 9]
     prompts = _prompts(lens, model.cfg.vocab)
@@ -320,12 +322,12 @@ def test_allocator_churn_free_list_consistent():
 
 
 def test_scheduler_recurrent_admission_page_free():
-    """reserve_pages=False (pure-recurrent models): admission needs only a
-    free slot — a request far beyond the page-derived cap is admitted and
-    the allocator is never touched."""
+    """paged=False (pure-recurrent models): admission needs only a free
+    slot — a request far beyond the page-derived cap is admitted and the
+    allocator is never touched."""
     s = Scheduler(capacity=2, prefill_chunk=4,
                   allocator=PageAllocator(4), page_size=4, max_pages=2,
-                  reserve_pages=False)
+                  paged=False)
     s.add(_req(0, 64, gen=8))                 # 18 pages worth: fine
     s.add(_req(1, 64, gen=8))
     plan = s.next_tick()
@@ -414,3 +416,96 @@ def test_engine_pallas_backend_parity(model, params_by_format):
         np.testing.assert_array_equal(
             out["results"][rid], ref,
             err_msg=f"request {rid} (prompt_len={len(p)})")
+
+
+# ---------------------------------------------------------------------------
+# Request layer: prefix-cache hits + priority preemption (engine level)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("fmt", ["dense", "bcsr", "palette8"])
+@pytest.mark.parametrize("jumbo", [False, True])
+def test_prefix_cache_hit_per_token_parity(model, params_by_format, fmt,
+                                           jumbo):
+    """The prefix-cache acceptance matrix: a cold wave populates the radix
+    tree, a warm wave of requests sharing the 14-token prefix maps the
+    cached pages (incl. a COW boundary page — 14 is not page-aligned) and
+    every request still matches generate() token for token, across
+    dense/BCSR/PaletteBCSR weights and chunked vs jumbo first prefill."""
+    params = params_by_format[fmt]
+    shared = _prompts([14], model.cfg.vocab, seed=23)[0]
+    tails = _prompts([3, 2, 5], model.cfg.vocab, seed=29)
+    prompts = [np.concatenate([shared, t]) for t in tails]
+    eng = ServeEngine(model, params, EngineConfig(
+        max_batch=2, prefill_chunk=8, page_size=4, max_seq_len=24,
+        first_chunk=16 if jumbo else None, prefix_cache=True))
+    out_cold = eng.run([(prompts[0], GEN)])
+    assert eng.prefix_cache.tokens_hit == 0          # tree was empty
+    out_warm = eng.run([(p, GEN) for p in prompts[1:]])
+    # both warm requests hit at least the 3 fully shared pages (12 tokens)
+    assert out_warm["stats"]["n_cached_tokens"] >= 2 * 12
+    assert out_warm["stats"]["prefix_hit_rate"] > 0
+    results = {**out_cold["results"], **out_warm["results"]}
+    for rid, p in enumerate(prompts):
+        ref = np.asarray(generate(model, params, p[None, :], GEN))[0]
+        np.testing.assert_array_equal(
+            results[rid], ref,
+            err_msg=f"request {rid} ({fmt}, jumbo={jumbo})")
+    widths = {1, 8} | ({16} if jumbo else set())
+    assert eng.tick_widths <= widths                 # no extra step shape
+
+
+def test_preempt_resume_per_token_parity(model, params_by_format):
+    """A batch-class request is preempted mid-decode by an interactive
+    arrival (capacity 1), its pages are freed, and on resume its prompt +
+    generated tokens are re-prefilled — both requests still match the
+    uninterrupted generate() run token for token. The prefix cache makes
+    the resume cheap (the victim's own prompt pages survive in the tree)."""
+    params = params_by_format["bcsr"]
+    prompts = _prompts([9, 7], model.cfg.vocab, seed=31)
+    eng = ServeEngine(model, params, EngineConfig(
+        max_batch=1, prefill_chunk=8, page_size=4, max_seq_len=24,
+        prefix_cache=True))
+    finished = []
+    eng.submit(prompts[0], 8, priority="batch")
+    for _ in range(4):                               # batch starts decoding
+        finished.extend(eng.step())
+    eng.submit(prompts[1], 4, priority="interactive")
+    while eng.scheduler.has_work():
+        finished.extend(eng.step())
+    recs = {r["rid"]: r for r in finished}
+    assert eng.scheduler.n_preemptions >= 1
+    assert recs[0]["n_preempted"] >= 1
+    # the interactive request finished before the preempted batch one
+    assert [r["rid"] for r in finished].index(1) < \
+        [r["rid"] for r in finished].index(0)
+    for rid, gen in ((0, 8), (1, 4)):
+        ref = np.asarray(generate(model, params,
+                                  prompts[rid][None, :], gen))[0]
+        np.testing.assert_array_equal(recs[rid]["tokens"], ref,
+                                      err_msg=f"request {rid}")
+    # everything recycled: only the radix tree still owns pages
+    tree = eng.prefix_cache.n_cached_pages
+    assert eng.allocator.n_free == eng.config.total_pages - 1 - tree
+
+
+def test_engine_per_class_stats_and_hit_rate():
+    """run() stats carry the SLO accounting: by_class p50/p95 TTFT and
+    latency keyed by priority, n_preemptions, prefix_hit_rate."""
+    model = build("smollm-360m", reduced=True)
+    params = model.init(jax.random.PRNGKey(2))
+    prompts = _prompts([6, 6, 6], model.cfg.vocab)
+    eng = ServeEngine(model, params, EngineConfig(
+        max_batch=2, prefill_chunk=8, page_size=4, max_seq_len=16,
+        prefix_cache=True))
+    for i, pr in enumerate(["interactive", "standard", "batch"]):
+        eng.submit(prompts[i], 3, priority=pr)
+    finished = []
+    while eng.scheduler.has_work():
+        finished.extend(eng.step())
+    stats = eng._stats(finished, 1.0)
+    assert set(stats["by_class"]) == {0, 1, 2}
+    for cs in stats["by_class"].values():
+        assert cs["n_requests"] == 1
+        assert cs["latency_p95_s"] >= cs["ttft_p50_s"] >= 0
+    assert stats["n_preemptions"] == eng.scheduler.n_preemptions
+    assert 0.0 <= stats["prefix_hit_rate"] <= 1.0
