@@ -17,7 +17,12 @@ Gated metrics, extracted per report:
   by construction,
 * any row carrying ``prefix_ttft_speedup=`` (the serve-engine
   shared-prefix lane) — warm (prefix-cache-hit) vs cold prefill TTFT of
-  the same run, a same-run ratio for the same reason.
+  the same run, a same-run ratio for the same reason,
+* any row carrying ``router_scale=`` (the serve-engine router lane) —
+  2-replica vs 1-replica aggregate tokens/s of the same run,
+* any row carrying ``affinity_retention=`` — the fraction of the
+  single-replica warm-TTFT speedup that prefix-affinity routing keeps at
+  2 replicas (also a same-run ratio).
 
 Absolute numbers are machine-dependent (the committed baselines were not
 necessarily produced on the same runner class); ratios against the same
@@ -86,6 +91,18 @@ def gated_metrics(report: dict, absolute: bool = False) -> dict:
             v = _field(derived, "prefix_ttft_speedup")
             if v is not None:
                 out[row["name"]] = (v, f"{v:.3f}x cold-prefill TTFT")
+                continue
+            # router lanes: replica-scaling and affinity-retention are
+            # same-run ratios too (2-replica vs 1-replica of the same
+            # process on the same machine)
+            v = _field(derived, "router_scale")
+            if v is not None:
+                out[row["name"]] = (v, f"{v:.3f}x 1-replica tok/s")
+                continue
+            v = _field(derived, "affinity_retention")
+            if v is not None:
+                out[row["name"]] = (v, f"{v:.3f}x single-replica "
+                                       "warm-TTFT speedup")
     return out
 
 

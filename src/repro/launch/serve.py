@@ -166,6 +166,22 @@ def main(argv=None):
                     help="with --engine (greedy): also run every request "
                          "through the sequential generate() path and fail "
                          "on any per-token mismatch")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="with --engine: serve through N data-parallel "
+                         "engine replicas behind the asyncio router "
+                         "(serve/router.py). Replicas share the same "
+                         "immutable (compressed) params — the smaller the "
+                         "model, the more replicas fit per host")
+    ap.add_argument("--route", default="prefix",
+                    choices=["prefix", "least-loaded", "round-robin"],
+                    help="router dispatch policy: 'prefix' = "
+                         "rendezvous-hash the leading page-aligned prompt "
+                         "tokens so shared system prompts stay on the "
+                         "replica whose radix prefix cache holds them "
+                         "(falls back to least-loaded for short prompts "
+                         "and failed replicas), 'least-loaded' = queue "
+                         "depth + reserved pages, 'round-robin' = modulo "
+                         "counter")
     args = ap.parse_args(argv)
     if args.quantize_bits and (not args.sparse or args.ckpt_dir):
         raise SystemExit(
@@ -241,9 +257,7 @@ def main(argv=None):
             return _run_engine(model, params, args)
         t0 = time.perf_counter()
         out = generate(model, params, prompt, args.gen,
-                       temperature=args.temperature,
-                       rng=jax.random.PRNGKey(1),
-                       top_k=args.top_k, top_p=args.top_p)
+                       sampling=_sampling(args), rng=jax.random.PRNGKey(1))
         dt = time.perf_counter() - t0
     print(f"generated {out.shape} in {dt:.2f}s "
           f"({args.batch * args.gen / dt:.1f} tok/s)")
@@ -251,63 +265,119 @@ def main(argv=None):
     return out
 
 
-def _load_requests(args, vocab: int) -> list[dict]:
-    """Engine submit() kwargs from --requests JSON (or the --batch/
-    --prompt-len/--gen defaults). Random prompts are seeded per request
-    index so the mix is reproducible; each entry may carry a "priority"
-    (class name or int, default --priority)."""
+def _sampling(args):
+    """The one place serve flags become a typed SamplingParams."""
+    from repro.serve.api import SamplingParams
+    return SamplingParams(temperature=args.temperature, top_k=args.top_k,
+                          top_p=args.top_p)
+
+
+def _load_requests(args, vocab: int) -> list:
+    """``api.Request`` list from --requests JSON (or the --batch/
+    --prompt-len/--gen defaults), validated against the typed schema
+    (``api.parse_request_file``) with actionable errors. Random prompts are
+    seeded per request index so the mix is reproducible."""
     import json
 
-    from repro.serve.scheduler import resolve_priority
+    from repro.serve import api
 
     if args.requests:
         with open(args.requests) as f:
-            spec = json.load(f)
+            try:
+                spec = json.load(f)
+            except json.JSONDecodeError as e:
+                raise SystemExit(f"--requests {args.requests}: not valid "
+                                 f"JSON ({e})")
     else:
         spec = [{"prompt_len": args.prompt_len, "gen": args.gen}
                 for _ in range(args.batch)]
+    try:
+        entries = api.parse_request_file(spec, default_gen=args.gen,
+                                         default_priority=args.priority)
+    except api.ApiValidationError as e:
+        raise SystemExit(f"--requests {args.requests or '(defaults)'}: {e}")
     out = []
-    for i, e in enumerate(spec):
-        gen = int(e.get("gen", args.gen))
-        if "prompt" in e:
-            ids = np.asarray(e["prompt"], np.int32)
-        else:
+    for i, e in enumerate(entries):
+        ids = e["prompt"]
+        if ids is None:
             ids = np.asarray(jax.random.randint(
                 jax.random.fold_in(jax.random.PRNGKey(1234), i),
-                (int(e["prompt_len"]),), 0, vocab), np.int32)
-        out.append({"prompt": ids, "max_new_tokens": gen,
-                    "priority": resolve_priority(
-                        e.get("priority", args.priority))})
+                (e["prompt_len"],), 0, vocab), np.int32)
+        out.append(api.Request(prompt=ids,
+                               max_new_tokens=e["max_new_tokens"],
+                               eos_id=e["eos_id"], priority=e["priority"],
+                               sampling=e["sampling"]))
     return out
+
+
+def _engine_config(args, max_seq: int):
+    """The one place serve flags become an ``EngineConfig`` — also what
+    the router replicates (all replicas share this single value)."""
+    from repro.serve.engine import EngineConfig
+    return EngineConfig(max_batch=args.max_batch,
+                        prefill_chunk=args.prefill_chunk,
+                        page_size=args.page_size, max_seq_len=max_seq,
+                        first_chunk=args.first_chunk or None,
+                        attn_backend=args.attn_backend,
+                        kv_splits=args.kv_splits,
+                        prefix_cache=args.prefix_cache,
+                        sampling=_sampling(args))
+
+
+def _print_slo_classes(s):
+    if len(s["by_class"]) > 1 or s.get("n_preemptions"):
+        for c, cs in s["by_class"].items():
+            print(f"  class {c}: {cs['n_requests']} requests "
+                  f"({cs['n_preempted']} preempted) | ttft p50/p95 "
+                  f"{cs['ttft_p50_s']*1e3:.0f}/{cs['ttft_p95_s']*1e3:.0f}ms"
+                  f" | latency p50/p95 {cs['latency_p50_s']*1e3:.0f}/"
+                  f"{cs['latency_p95_s']*1e3:.0f}ms")
+
+
+def _check_parity(model, params, args, requests, results):
+    if args.temperature > 0:
+        raise SystemExit("--parity-check needs greedy decoding "
+                         "(--temperature 0): generate() and the engine "
+                         "draw from different rng streams")
+    for rid, r in enumerate(requests):
+        ids, gen = r.prompt_ids, r.max_new_tokens
+        ref = np.asarray(generate(model, params, ids[None, :], gen))[0]
+        got = np.asarray(results[rid])
+        if r.eos_id is not None and r.eos_id in ref.tolist():
+            ref = ref[:ref.tolist().index(r.eos_id) + 1]
+        if not np.array_equal(ref, got):
+            raise SystemExit(
+                f"engine-vs-generate token mismatch for request {rid} "
+                f"(prompt_len={len(ids)}): {got.tolist()} != "
+                f"{ref.tolist()}")
+    print(f"engine-vs-generate parity OK ({len(requests)} requests)")
 
 
 def _run_engine(model, params, args):
     """The --engine path: continuous batching over the slot resource pools
-    (paged KV for attention layers, slot-indexed state for recurrent)."""
-    from repro.serve.engine import EngineConfig, ServeEngine
+    (paged KV for attention layers, slot-indexed state for recurrent);
+    with --replicas N > 1, N such engines behind the asyncio router."""
+    from repro.serve.engine import ServeEngine
 
     requests = _load_requests(args, model.cfg.vocab)
-    max_seq = max(len(r["prompt"]) + r["max_new_tokens"] for r in requests)
+    max_seq = max(len(r.prompt) + r.max_new_tokens for r in requests)
+    config = _engine_config(args, max_seq)
     try:
-        engine = ServeEngine(
-            model, params,
-            EngineConfig(max_batch=args.max_batch,
-                         prefill_chunk=args.prefill_chunk,
-                         page_size=args.page_size, max_seq_len=max_seq,
-                         first_chunk=args.first_chunk or None,
-                         attn_backend=args.attn_backend,
-                         kv_splits=args.kv_splits,
-                         prefix_cache=args.prefix_cache,
-                         temperature=args.temperature, top_k=args.top_k,
-                         top_p=args.top_p),
-            rng=jax.random.PRNGKey(1))
+        if args.replicas > 1:
+            return _run_router(model, params, args, config, requests)
+        engine = ServeEngine(model, params, config,
+                             rng=jax.random.PRNGKey(1))
     except NotImplementedError as e:
         raise SystemExit(f"--engine: {e}")
     pb = engine.pool_bytes
     print(f"engine pools: kv_pages={pb['kv_page_bytes'] / 2**20:.2f} MiB "
           f"recurrent_state={pb['state_slot_bytes'] / 2**20:.2f} MiB "
           f"({engine.config.max_batch} slots)")
-    out = engine.run(requests)
+    from repro.serve.api import ApiValidationError
+    try:
+        out = engine.run(requests)
+    except ApiValidationError as e:
+        raise SystemExit(f"--engine: {e}")
     s = out["stats"]
     print(f"engine: {s['n_requests']} requests "
           f"({s['n_prompt']} prompt + {s['n_generated']} new tokens) in "
@@ -318,32 +388,46 @@ def _run_engine(model, params, args):
           f"{s['n_prefill_chunks']} prefill chunks | pools "
           f"kv={s['kv_page_bytes']} state={s['state_slot_bytes']} bytes")
     if len(s["by_class"]) > 1 or s["n_preemptions"]:
-        for c, cs in s["by_class"].items():
-            print(f"  class {c}: {cs['n_requests']} requests "
-                  f"({cs['n_preempted']} preempted) | ttft p50/p95 "
-                  f"{cs['ttft_p50_s']*1e3:.0f}/{cs['ttft_p95_s']*1e3:.0f}ms"
-                  f" | latency p50/p95 {cs['latency_p50_s']*1e3:.0f}/"
-                  f"{cs['latency_p95_s']*1e3:.0f}ms")
+        _print_slo_classes(s)
         print(f"  {s['n_preemptions']} preemptions")
     if args.prefix_cache:
         print(f"  prefix cache: hit rate {s['prefix_hit_rate']:.1%} "
               f"({s['n_cached_tokens']} prompt tokens served from cache)")
-    print("sample:", out["results"][0][:16].tolist())
+    print("sample:", [int(t) for t in out["results"][0][:16]])
     if args.parity_check:
-        if args.temperature > 0:
-            raise SystemExit("--parity-check needs greedy decoding "
-                             "(--temperature 0): generate() and the engine "
-                             "draw from different rng streams")
-        for rid, r in enumerate(requests):
-            ids, gen = r["prompt"], r["max_new_tokens"]
-            ref = np.asarray(generate(model, params, ids[None, :], gen))[0]
-            got = out["results"][rid]
-            if not np.array_equal(ref, got):
-                raise SystemExit(
-                    f"engine-vs-generate token mismatch for request {rid} "
-                    f"(prompt_len={len(ids)}): {got.tolist()} != "
-                    f"{ref.tolist()}")
-        print(f"engine-vs-generate parity OK ({len(requests)} requests)")
+        _check_parity(model, params, args, requests, out["results"])
+    return out
+
+
+def _run_router(model, params, args, config, requests):
+    """--replicas N: N identical engines (one EngineConfig, shared params)
+    behind the prefix-affinity/least-loaded/round-robin router."""
+    from repro.serve.router import Router
+
+    router = Router.build(model, params, config, args.replicas,
+                          policy=args.route)
+    out = router.serve(requests)
+    s = out["stats"]
+    print(f"router[{args.replicas}x {args.route}]: {s['n_requests']} "
+          f"requests ({s['n_prompt']} prompt + {s['n_generated']} new "
+          f"tokens) in {s['wall_s']:.2f}s = {s['tok_s']:.1f} tok/s | "
+          f"ttft p50/p95 {s['ttft_p50_s']*1e3:.0f}/{s['ttft_p95_s']*1e3:.0f}ms"
+          f" | latency p50/p95 {s['latency_p50_s']*1e3:.0f}/"
+          f"{s['latency_p95_s']*1e3:.0f}ms | "
+          f"{s['n_redispatched']} re-dispatched, "
+          f"{s['n_failed_replicas']} failed replicas")
+    _print_slo_classes(s)
+    for r in s["per_replica"]:
+        line = (f"  replica {r['replica']}: {r['n_requests']} requests, "
+                f"{r['n_generated']} tokens, {r['n_ticks']} ticks")
+        if args.prefix_cache:
+            line += f", prefix hit rate {r['prefix_hit_rate']:.1%}"
+        if r["failed"]:
+            line += " [FAILED]"
+        print(line)
+    print("sample:", [int(t) for t in out["results"][0][:16]])
+    if args.parity_check:
+        _check_parity(model, params, args, requests, out["results"])
     return out
 
 

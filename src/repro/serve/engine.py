@@ -36,11 +36,14 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models.transformer import Model
+from repro.serve import api
+from repro.serve.api import ApiValidationError, Completion, SamplingParams
 from repro.serve.paged_kv import (PageAllocator, copy_page, init_paged_cache,
                                   pages_for, slot_resource_bytes,
                                   unsupported_kinds, zero_state_slots)
 from repro.serve.prefix_cache import PrefixCache
-from repro.serve.scheduler import Request, Scheduler
+from repro.serve.scheduler import Scheduler
+from repro.serve.scheduler import Request as _SchedRequest
 from repro.serve.step import make_sampler
 
 
@@ -74,6 +77,15 @@ class EngineConfig:
     class_shares:  optional ((class, weight), ...) pairs overriding the
                    per-priority-class prefill token-budget shares
                    (default: class c weighs 2^-c).
+    sampling:      engine-wide ``SamplingParams`` — the sampler is part of
+                   the compiled step, so it is a property of the engine,
+                   not the request (a request carrying explicit sampling
+                   must match it). Legacy loose ``temperature``/``top_k``/
+                   ``top_p`` fields fold into it with a one-time warning.
+
+    One ``EngineConfig`` value is everything needed to spawn an identical
+    replica — the router serializes it (``to_json``/``from_json``) as its
+    wire format and builds every replica from the same instance.
     """
     max_batch: int = 8
     prefill_chunk: int = 32
@@ -86,9 +98,27 @@ class EngineConfig:
     kv_splits: int = 1
     prefix_cache: bool = False
     class_shares: Optional[tuple] = None
-    temperature: float = 0.0
-    top_k: int = 0
-    top_p: float = 1.0
+    sampling: SamplingParams = SamplingParams()
+    # deprecated loose spellings — fold into ``sampling`` (warn once)
+    temperature: Optional[float] = None
+    top_k: Optional[int] = None
+    top_p: Optional[float] = None
+
+    def __post_init__(self):
+        legacy = {k: getattr(self, k)
+                  for k in ("temperature", "top_k", "top_p")
+                  if getattr(self, k) is not None}
+        if legacy:
+            merged = api.merge_legacy_sampling(
+                None if self.sampling == SamplingParams() else self.sampling,
+                "serve.engine.EngineConfig", **legacy)
+            object.__setattr__(self, "sampling", merged)
+            for k in legacy:
+                object.__setattr__(self, k, None)
+        if self.class_shares is not None:
+            object.__setattr__(self, "class_shares",
+                               tuple((int(c), float(w))
+                                     for c, w in self.class_shares))
 
     @property
     def pages_per_slot(self) -> int:
@@ -99,11 +129,36 @@ class EngineConfig:
         return (self.n_pages if self.n_pages is not None
                 else self.max_batch * self.pages_per_slot + 1)
 
+    def to_json(self) -> dict:
+        """Plain-dict form (the router wire format / replica spawn spec)."""
+        d = {f.name: getattr(self, f.name)
+             for f in dataclasses.fields(self)
+             if f.name not in ("temperature", "top_k", "top_p")
+             and getattr(self, f.name) != f.default}
+        if "sampling" in d:
+            d["sampling"] = self.sampling.to_json()
+        if self.class_shares is not None:
+            d["class_shares"] = [list(p) for p in self.class_shares]
+        return d
+
+    @classmethod
+    def from_json(cls, d: dict) -> "EngineConfig":
+        allowed = tuple(f.name for f in dataclasses.fields(cls)
+                        if f.name not in ("temperature", "top_k", "top_p"))
+        api._check_keys(d, allowed, "engine_config")
+        kw = dict(d)
+        if kw.get("sampling") is not None:
+            kw["sampling"] = SamplingParams.from_json(
+                kw["sampling"], "engine_config.sampling")
+        if kw.get("class_shares") is not None:
+            kw["class_shares"] = tuple(tuple(p) for p in kw["class_shares"])
+        return cls(**kw)
+
 
 class ServeEngine:
     """The step loop. ``sampler(logits, rng) -> tokens`` runs inside the
-    jitted step; default is built from the config's temperature/top-k/top-p
-    via ``serve.step.make_sampler`` (greedy when temperature == 0)."""
+    jitted step; default is built from ``config.sampling`` via
+    ``serve.step.make_sampler`` (greedy when temperature == 0)."""
 
     def __init__(self, model: Model, params, config: EngineConfig,
                  sampler: Optional[Callable] = None, rng=None):
@@ -143,8 +198,7 @@ class ServeEngine:
             paged=self.has_attn,
             prefix_cache=self.prefix_cache,
             class_shares=dict(config.class_shares or ()))
-        sampler = sampler or make_sampler(config.temperature, config.top_k,
-                                          config.top_p)
+        sampler = sampler or make_sampler(config.sampling)
         self._rng = rng if rng is not None else jax.random.PRNGKey(0)
         self._next_rid = 0
         self.n_ticks = 0
@@ -172,17 +226,68 @@ class ServeEngine:
 
     # -- request intake -----------------------------------------------------
 
-    def submit(self, prompt, max_new_tokens: int, eos_id: Optional[int] = None,
-               stream: Optional[Callable] = None, priority: int = 1) -> int:
-        """Queue one request; returns its rid. ``stream(rid, token, done)``
-        is invoked for every generated token as it is produced;
-        ``priority`` is the scheduling class (0 = most important, or an
-        ``PRIORITY_CLASSES`` name — lower classes can be preempted)."""
-        rid = self._next_rid
-        self._next_rid += 1
-        req = Request(rid=rid, prompt=np.asarray(prompt, np.int32).ravel(),
-                      max_new_tokens=int(max_new_tokens), eos_id=eos_id,
-                      stream=stream, priority=priority)
+    def submit(self, request=None, max_new_tokens: Optional[int] = None,
+               eos_id: Optional[int] = None,
+               stream: Optional[Callable] = None, priority=None) -> int:
+        """Queue one ``api.Request``; returns its request id.
+
+        The typed call is ``submit(api.Request(...), stream=...)`` —
+        ``stream(event: api.StreamEvent)`` fires for every generated token
+        as it is produced. The legacy spelling
+        ``submit(prompt, max_new_tokens, eos_id, stream, priority)`` keeps
+        working through a once-warning shim (its callback keeps the old
+        ``stream(rid, token, done)`` signature).
+
+        A request carrying explicit ``sampling`` must match the engine's
+        compiled ``config.sampling`` — the sampler is engine-wide.
+        """
+        if not isinstance(request, api.Request):
+            # legacy path: first positional was the raw prompt
+            api._warn_once(
+                "serve.engine.ServeEngine.submit",
+                "ServeEngine.submit(prompt, max_new_tokens, ...) is "
+                "deprecated; pass serve.api.Request (stream callbacks "
+                "then receive a StreamEvent)")
+            if request is None or max_new_tokens is None:
+                raise ApiValidationError(
+                    "submit() needs an api.Request (or legacy prompt + "
+                    "max_new_tokens)")
+            legacy_stream = stream
+            if stream is not None:
+                def stream(ev, _cb=legacy_stream):
+                    _cb(ev.request_id, ev.token, ev.done)
+            request = api.Request(
+                prompt=request, max_new_tokens=max_new_tokens,
+                eos_id=eos_id,
+                priority=1 if priority is None else priority)
+        elif max_new_tokens is not None or eos_id is not None \
+                or priority is not None:
+            raise ApiValidationError(
+                "submit(api.Request, ...) takes the request fields from "
+                "the Request — don't also pass max_new_tokens/eos_id/"
+                "priority kwargs")
+        if request.sampling is not None \
+                and request.sampling != self.config.sampling:
+            raise ApiValidationError(
+                f"request.sampling={request.sampling} != the engine's "
+                f"compiled sampling={self.config.sampling} — the sampler "
+                "is engine-wide (EngineConfig.sampling); route this "
+                "request to a matching engine or drop request.sampling")
+        if request.request_id is None:
+            rid = self._next_rid
+        else:
+            rid = int(request.request_id)
+        self._next_rid = max(self._next_rid, rid) + 1
+        cb = None
+        if stream is not None:
+            def cb(_rid, token, done, _stream=stream, _n=[0]):
+                _stream(api.StreamEvent(request_id=_rid, token=int(token),
+                                        index=_n[0], done=bool(done)))
+                _n[0] += 1
+        req = _SchedRequest(rid=rid, prompt=request.prompt_ids,
+                            max_new_tokens=request.max_new_tokens,
+                            eos_id=request.eos_id, stream=cb,
+                            priority=request.priority)
         self.scheduler.add(req, now=time.perf_counter())
         return rid
 
@@ -224,13 +329,20 @@ class ServeEngine:
 
     def run(self, requests=None) -> dict:
         """Serve until the queue drains. ``requests``: optional iterable of
-        ``(prompt, max_new_tokens)`` tuples or ``Request``-like dicts to
-        submit first. Returns ``{"results": {rid: tokens}, "stats": ...}``."""
+        ``api.Request`` values, ``(prompt, max_new_tokens)`` tuples (a
+        documented convenience — converted without warning), or legacy
+        ``submit``-kwarg dicts. Returns ``{"results": {rid: tokens},
+        "completions": [api.Completion, ...], "stats": ...}``."""
         for r in (requests or []):
-            if isinstance(r, dict):
-                self.submit(**r)
+            if isinstance(r, api.Request):
+                self.submit(r)
+            elif isinstance(r, dict):
+                kw = dict(r)
+                stream = kw.pop("stream", None)
+                self.submit(api.Request(**kw), stream=stream)
             else:
-                self.submit(*r)
+                prompt, gen = r
+                self.submit(api.Request(prompt=prompt, max_new_tokens=gen))
         t0 = time.perf_counter()
         ticks0 = self.n_ticks
         chunks0 = self.scheduler.n_prefill_chunks
@@ -247,6 +359,7 @@ class ServeEngine:
         stats["n_scheduled_tokens"] = \
             self.scheduler.n_scheduled_tokens - tokens0
         return {"results": {r["rid"]: r["tokens"] for r in finished},
+                "completions": [Completion.from_record(r) for r in finished],
                 "stats": stats}
 
     def _stats(self, finished: list[dict], wall: float) -> dict:

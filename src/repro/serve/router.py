@@ -1,0 +1,562 @@
+"""Multi-replica serving router: one asyncio front-end, N ``ServeEngine``
+replicas.
+
+The paper's compression ratios (3.5–5.4× smaller models) buy *replicas*:
+every replica shares the same immutable compressed ``params`` tree (jax
+arrays are read-only, so N replicas cost one copy of the weights) and owns
+only its private slot resource pools — so the smaller the compressed model,
+the more data-parallel engines fit on a host. The router is the layer that
+turns that into aggregate tokens/s.
+
+Architecture
+------------
+
+* Each replica is a **worker thread** owning one ``ServeEngine`` built from
+  the same ``EngineConfig`` value. The jitted mixed step releases the GIL
+  during XLA execution, so replicas overlap compute with each other and
+  with the router's host-side bookkeeping.
+* The router itself is **asyncio**: ``submit()`` dispatches an
+  ``api.Request`` and returns a future ``api.Completion``; streaming
+  callbacks receive ``api.StreamEvent`` (with ``replica`` set) in the event
+  loop thread. Workers talk back via ``loop.call_soon_threadsafe`` only —
+  all router state is mutated in the loop thread, no locks.
+* **Dispatch** (``--route``):
+  - ``prefix`` (default): rendezvous-hash (HRW) the prompt's leading
+    page-aligned tokens over the healthy replicas, so requests sharing a
+    system prompt land where the radix prefix cache already holds it —
+    and replica death remaps only the dead replica's keys. Requests too
+    short for a full page fall back to least-loaded; a busy preferred
+    replica is waited on (bounded by backpressure), not diverted — a
+    diverted request would cold-prefill the shared prefix anyway.
+  - ``least-loaded``: queue depth + reserved KV pages, ties to the lowest
+    replica index (deterministic).
+  - ``round-robin``: modulo counter over healthy replicas (the control
+    lane that destroys prefix affinity).
+* **Backpressure**: at most ``max_inflight`` router-side requests per
+  replica (default ``2 * max_batch``); ``submit()`` awaits capacity.
+* **Health**: a worker that raises marks itself dead immediately; a
+  monitor task also catches hard-dead threads and heartbeat stalls
+  (``stall_timeout_s`` with work pending). A failed replica is drained:
+  its queued + running requests are **re-dispatched** as resume requests
+  (original prompt + tokens generated so far, reduced budget) — greedy
+  decoding makes the stitched stream match an uninterrupted run
+  token-for-token. Stale events from the old dispatch are dropped by an
+  epoch check, so a re-generated token is streamed exactly once.
+"""
+from __future__ import annotations
+
+import asyncio
+import hashlib
+import queue
+import threading
+import time
+from typing import Callable, Optional
+
+import numpy as np
+
+from repro.serve import api
+from repro.serve.api import ApiValidationError, Completion, Request, StreamEvent
+from repro.serve.engine import EngineConfig, ServeEngine
+
+ROUTE_POLICIES = ("prefix", "least-loaded", "round-robin")
+
+_STOP = object()
+
+
+class ReplicaFailed(RuntimeError):
+    """Every replica is dead — the request cannot be served."""
+
+
+class _Replica:
+    """One worker thread + its engine + the router's view of its load."""
+
+    def __init__(self, idx: int, engine: ServeEngine):
+        self.idx = idx
+        self.engine = engine
+        self.inbox: queue.Queue = queue.Queue()
+        self.thread: Optional[threading.Thread] = None   # set by start()
+        self.hb = time.monotonic()        # worker heartbeat (stall detection)
+        self.error: Optional[BaseException] = None
+        self.failed = False               # set by the router (loop thread)
+        self.inflight = 0                 # router-side dispatched - finished
+        self.n_done = 0
+        self.n_tokens = 0
+        self._post: Optional[Callable] = None   # set by Router.start
+        self._epochs: dict[int, int] = {}       # rid -> dispatch epoch
+
+    # -- worker thread ------------------------------------------------------
+
+    def _run(self):
+        try:
+            while True:
+                self.hb = time.monotonic()
+                busy = self.engine.scheduler.has_work()
+                try:
+                    item = (self.inbox.get_nowait() if busy
+                            else self.inbox.get(timeout=0.02))
+                except queue.Empty:
+                    item = None
+                while item is not None:
+                    if item is _STOP:
+                        return
+                    req, cb, epoch = item
+                    self._epochs[req.request_id] = epoch
+                    try:
+                        self.engine.submit(req, stream=cb)
+                    except Exception as e:   # bad request, not a dead engine
+                        self._post("err", self.idx, epoch, req.request_id, e)
+                    try:
+                        item = self.inbox.get_nowait()
+                    except queue.Empty:
+                        item = None
+                if self.engine.scheduler.has_work():
+                    for rec in self.engine.step():
+                        self._post("done", self.idx,
+                                   self._epochs.get(rec["rid"], 0),
+                                   rec["rid"], rec)
+        except BaseException as e:           # engine died: router re-dispatches
+            self.error = e
+            self._post("died", self.idx, 0, -1, e)
+
+    # -- router-side load signal (racy reads of worker state are fine: these
+    # are heuristics, and the GIL keeps each read itself consistent) --------
+
+    @property
+    def load(self) -> float:
+        sched = self.engine.scheduler
+        return self.inflight + (sched.n_reserved_pages
+                                / max(self.engine.config.total_pages, 1))
+
+
+class _Inflight:
+    """Router-side record of one request across (re-)dispatches."""
+
+    __slots__ = ("rid", "request", "future", "stream", "replica", "epoch",
+                 "generated", "n_redispatched", "t_submit", "t_first")
+
+    def __init__(self, rid: int, request: Request, future, stream):
+        self.rid = rid
+        self.request = request
+        self.future = future
+        self.stream = stream
+        self.replica = -1
+        self.epoch = 0
+        self.generated: list[int] = []
+        self.n_redispatched = 0
+        self.t_submit = time.perf_counter()
+        self.t_first: Optional[float] = None
+
+
+class Router:
+    """Load-balance streaming requests over N engine replicas.
+
+    ``engines`` must be built from one ``EngineConfig`` (use
+    ``Router.build``) — dispatch assumes replicas are interchangeable.
+    Async surface: ``await start()``, ``fut = await submit(req)``,
+    ``completion = await fut``, ``await stop()``. ``serve(requests)`` is
+    the sync convenience wrapper mirroring ``ServeEngine.run``.
+    """
+
+    def __init__(self, engines: list[ServeEngine], *,
+                 policy: str = "prefix", affinity_pages: int = 4,
+                 max_inflight: Optional[int] = None,
+                 stall_timeout_s: float = 30.0):
+        if not engines:
+            raise ApiValidationError("router needs at least one replica")
+        if policy not in ROUTE_POLICIES:
+            raise ApiValidationError(
+                f"unknown route policy {policy!r} — one of "
+                f"{', '.join(ROUTE_POLICIES)}")
+        self.policy = policy
+        self.affinity_pages = int(affinity_pages)
+        self.stall_timeout_s = float(stall_timeout_s)
+        self.replicas = [_Replica(i, e) for i, e in enumerate(engines)]
+        self.max_inflight = int(max_inflight
+                                or 2 * engines[0].config.max_batch)
+        self._inflight: dict[int, _Inflight] = {}
+        self._completions: list[Completion] = []
+        self._next_rid = 0
+        self._rr = 0                       # round-robin counter
+        self._loop: Optional[asyncio.AbstractEventLoop] = None
+        self._cap_event: Optional[asyncio.Event] = None
+        self._monitor_task = None
+        self._started = False
+        self._fail_after = None            # (replica idx, n_tokens) hook
+
+    @classmethod
+    def build(cls, model, params, config: EngineConfig, n_replicas: int,
+              **kw) -> "Router":
+        """Spawn ``n_replicas`` identical engines from one ``EngineConfig``.
+        All replicas share the same (compressed) ``params`` tree — jax
+        arrays are immutable, so the weights exist once regardless of N."""
+        engines = [ServeEngine(model, params, config)
+                   for _ in range(int(n_replicas))]
+        return cls(engines, **kw)
+
+    # -- lifecycle ----------------------------------------------------------
+
+    async def start(self) -> None:
+        if self._started:
+            return
+        self._started = True
+        self._loop = asyncio.get_running_loop()
+        self._cap_event = asyncio.Event()
+
+        def post(kind, idx, epoch, rid, payload):
+            handler = {"done": self._on_done, "err": self._on_error,
+                       "died": self._on_died}[kind]
+            try:
+                self._loop.call_soon_threadsafe(handler, idx, epoch, rid,
+                                                payload)
+            except RuntimeError:           # loop already closed (shutdown)
+                pass
+
+        for rep in self.replicas:
+            rep._post = post
+            if rep.failed:
+                continue
+            if rep.thread is None or not rep.thread.is_alive():
+                # (re-)spawn the worker: the router is restartable — the
+                # engines (and their warm compile + prefix caches) persist
+                # across serve() waves, only the threads are per-run
+                while not rep.inbox.empty():     # stale _STOPs from stop()
+                    try:
+                        rep.inbox.get_nowait()
+                    except queue.Empty:
+                        break
+                rep.error = None
+                rep.thread = threading.Thread(target=rep._run, daemon=True,
+                                              name=f"replica-{rep.idx}")
+                rep.thread.start()
+        self._monitor_task = asyncio.ensure_future(self._monitor())
+
+    async def stop(self) -> None:
+        if not self._started:
+            return
+        if self._monitor_task is not None:
+            self._monitor_task.cancel()
+            self._monitor_task = None
+        for rep in self.replicas:
+            rep.inbox.put(_STOP)
+        for rep in self.replicas:
+            if rep.thread is not None:
+                rep.thread.join(timeout=10.0)
+        self._started = False
+
+    async def _monitor(self):
+        poll = min(0.05, self.stall_timeout_s / 4)
+        while True:
+            await asyncio.sleep(poll)
+            for rep in self.replicas:
+                if rep.failed:
+                    continue
+                dead = rep.error is not None or not rep.thread.is_alive()
+                stalled = (rep.inflight > 0 and
+                           time.monotonic() - rep.hb > self.stall_timeout_s)
+                if dead or stalled:
+                    self._handle_failure(
+                        rep.idx, "died" if dead else
+                        f"stalled (> {self.stall_timeout_s:g}s)")
+
+    # -- dispatch -----------------------------------------------------------
+
+    def _healthy(self) -> list[int]:
+        return [r.idx for r in self.replicas if not r.failed]
+
+    def _affinity_key(self, prompt: tuple) -> Optional[bytes]:
+        """The leading page-aligned prompt tokens — the unit the radix
+        prefix cache shares — as stable bytes; None when the prompt has no
+        full page (nothing cacheable to be affine to)."""
+        page = self.replicas[0].engine.config.page_size
+        n_pages = min(len(prompt) // page, self.affinity_pages)
+        if n_pages < 1:
+            return None
+        return np.asarray(prompt[:n_pages * page], np.int64).tobytes()
+
+    def _rendezvous(self, key: bytes, candidates: list[int]) -> int:
+        """Highest-random-weight hash: each replica scores the key; the
+        max wins. Removing a replica remaps only *its* keys — the property
+        that keeps warm prefix caches warm through membership churn."""
+        def score(i: int) -> int:
+            h = hashlib.blake2b(key + i.to_bytes(4, "little"),
+                                digest_size=8).digest()
+            return int.from_bytes(h, "little")
+        return max(candidates, key=lambda i: (score(i), -i))
+
+    def _least_loaded(self, candidates: list[int]) -> int:
+        return min(candidates, key=lambda i: (self.replicas[i].load, i))
+
+    def _choose(self, request: Request) -> Optional[int]:
+        """Pick a replica with capacity, or None (caller awaits)."""
+        healthy = self._healthy()
+        if not healthy:
+            raise ReplicaFailed("all replicas have failed")
+        free = [i for i in healthy
+                if self.replicas[i].inflight < self.max_inflight]
+        if self.policy == "round-robin":
+            i = healthy[self._rr % len(healthy)]
+            self._rr += 1
+            return i if self.replicas[i].inflight < self.max_inflight \
+                else None
+        if self.policy == "prefix":
+            key = self._affinity_key(request.prompt)
+            if key is not None:
+                i = self._rendezvous(key, healthy)
+                return i if self.replicas[i].inflight < self.max_inflight \
+                    else None              # wait for the affine replica
+        return self._least_loaded(free) if free else None
+
+    async def submit(self, request: Request,
+                     stream: Optional[Callable] = None) -> asyncio.Future:
+        """Dispatch one ``api.Request``; returns a future resolving to its
+        ``api.Completion``. ``stream(event: api.StreamEvent)`` fires in the
+        event loop thread for every token (``event.replica`` names the
+        serving replica; indices stay contiguous across a re-dispatch)."""
+        if not self._started:
+            await self.start()
+        if not isinstance(request, Request):
+            raise ApiValidationError(
+                f"router.submit needs serve.api.Request, got "
+                f"{type(request).__name__}")
+        cfg = self.replicas[0].engine.config
+        if request.sampling is not None and request.sampling != cfg.sampling:
+            raise ApiValidationError(
+                f"request.sampling={request.sampling} != the fleet's "
+                f"compiled sampling={cfg.sampling} — replicas share one "
+                "EngineConfig.sampling")
+        if request.request_id is None:
+            rid = self._next_rid
+        else:
+            rid = int(request.request_id)
+            if rid in self._inflight:
+                raise ApiValidationError(
+                    f"request_id {rid} is already in flight")
+        self._next_rid = max(self._next_rid, rid) + 1
+        inf = _Inflight(rid, request, self._loop.create_future(), stream)
+        self._inflight[rid] = inf
+        await self._dispatch(inf)
+        return inf.future
+
+    async def _dispatch(self, inf: _Inflight) -> None:
+        while True:
+            try:
+                idx = self._choose(inf.request)
+            except ReplicaFailed as e:
+                if not inf.future.done():
+                    inf.future.set_exception(e)
+                self._inflight.pop(inf.rid, None)
+                return
+            if idx is not None:
+                break
+            self._cap_event.clear()
+            await self._cap_event.wait()   # backpressure: wait for capacity
+        rep = self.replicas[idx]
+        inf.replica = idx
+        rep.inflight += 1
+        done_already = len(inf.generated)
+        req = inf.request
+        if done_already:                   # resume after a replica failure:
+            req = Request(                 # re-prefill prompt + generated
+                prompt=req.prompt + tuple(inf.generated),
+                max_new_tokens=req.max_new_tokens - done_already,
+                eos_id=req.eos_id, priority=req.priority,
+                sampling=req.sampling, request_id=inf.rid)
+        elif req.request_id != inf.rid:
+            req = Request(prompt=req.prompt,
+                          max_new_tokens=req.max_new_tokens,
+                          eos_id=req.eos_id, priority=req.priority,
+                          sampling=req.sampling, request_id=inf.rid)
+        epoch = inf.epoch
+
+        def cb(ev: StreamEvent, _idx=idx, _epoch=epoch, _rid=inf.rid):
+            # worker thread -> loop thread; stale epochs dropped there
+            try:
+                self._loop.call_soon_threadsafe(
+                    self._on_token, _idx, _epoch, _rid, int(ev.token),
+                    bool(ev.done))
+            except RuntimeError:
+                pass
+        rep.inbox.put((req, cb, epoch))
+
+    # -- event handlers (loop thread only) ----------------------------------
+
+    def _live(self, idx: int, epoch: int, rid: int) -> Optional[_Inflight]:
+        inf = self._inflight.get(rid)
+        if inf is None or inf.epoch != epoch or inf.replica != idx:
+            return None                    # stale: re-dispatched elsewhere
+        return inf
+
+    def _on_token(self, idx: int, epoch: int, rid: int, token: int,
+                  done: bool) -> None:
+        inf = self._live(idx, epoch, rid)
+        if inf is None:
+            return
+        if inf.t_first is None:
+            inf.t_first = time.perf_counter()
+        index = len(inf.generated)
+        inf.generated.append(token)
+        rep = self.replicas[idx]
+        rep.n_tokens += 1
+        if inf.stream is not None:
+            inf.stream(StreamEvent(request_id=rid, token=token, index=index,
+                                   done=done, replica=idx))
+        if self._fail_after is not None and idx == self._fail_after[0] \
+                and rep.n_tokens >= self._fail_after[1]:
+            self._fail_after = None
+            self._handle_failure(idx, "failure injected (fail_after)")
+
+    def _on_done(self, idx: int, epoch: int, rid: int, rec: dict) -> None:
+        inf = self._live(idx, epoch, rid)
+        if inf is None:
+            return
+        self._finalize(inf, rec)
+
+    def _on_error(self, idx: int, epoch: int, rid: int,
+                  exc: BaseException) -> None:
+        inf = self._live(idx, epoch, rid)
+        if inf is None:
+            return
+        self.replicas[idx].inflight -= 1
+        self._inflight.pop(rid, None)
+        if not inf.future.done():
+            inf.future.set_exception(exc)
+        self._cap_event.set()
+
+    def _on_died(self, idx: int, epoch: int, rid: int,
+                 exc: BaseException) -> None:
+        self._handle_failure(idx, f"worker raised {type(exc).__name__}: "
+                                  f"{exc}")
+
+    def _finalize(self, inf: _Inflight, rec: Optional[dict]) -> None:
+        rep = self.replicas[inf.replica]
+        rep.inflight -= 1
+        rep.n_done += 1
+        completion = Completion(
+            request_id=inf.rid, tokens=tuple(inf.generated),
+            n_prompt=len(inf.request.prompt), priority=inf.request.priority,
+            n_cached=rec["n_cached"] if rec else 0,
+            n_preempted=rec["n_preempted"] if rec else 0,
+            n_redispatched=inf.n_redispatched, replica=inf.replica,
+            t_submit=inf.t_submit, t_first=inf.t_first,
+            t_done=time.perf_counter())
+        self._inflight.pop(inf.rid, None)
+        self._completions.append(completion)
+        if not inf.future.done():
+            inf.future.set_result(completion)
+        self._cap_event.set()
+
+    # -- failure handling ---------------------------------------------------
+
+    def fail_replica(self, idx: int, reason: str = "failure injected",
+                     ) -> None:
+        """Force replica ``idx`` down (test/bench hook — the same path the
+        monitor takes for a crashed or stalled worker)."""
+        self._handle_failure(idx, reason)
+
+    def fail_replica_after(self, idx: int, n_tokens: int) -> None:
+        """Arm a deterministic failure: replica ``idx`` is killed as soon
+        as it has streamed ``n_tokens`` tokens (router-side count)."""
+        self._fail_after = (int(idx), int(n_tokens))
+
+    def _handle_failure(self, idx: int, reason: str) -> None:
+        rep = self.replicas[idx]
+        if rep.failed:
+            return
+        rep.failed = True
+        rep.inbox.put(_STOP)
+        victims = [inf for inf in self._inflight.values()
+                   if inf.replica == idx]
+        for inf in victims:
+            inf.epoch += 1                 # drop stale events from the old
+            inf.n_redispatched += 1        # dispatch (worker may still run)
+            rep.inflight -= 1
+            eos_hit = (inf.request.eos_id is not None and inf.generated
+                       and inf.generated[-1] == inf.request.eos_id)
+            if len(inf.generated) >= inf.request.max_new_tokens or eos_hit:
+                # finished, but the done event raced the failure: finalize
+                rep.inflight += 1          # _finalize decrements
+                inf.n_redispatched -= 1
+                self._finalize(inf, None)
+                continue
+            asyncio.ensure_future(self._dispatch(inf))
+        self._cap_event.set()
+
+    # -- fleet stats --------------------------------------------------------
+
+    def fleet_stats(self, wall: Optional[float] = None,
+                    completions: Optional[list] = None) -> dict:
+        """Aggregate SLO stats — over ``completions`` when given (one
+        serve() wave), else everything the router ever finished — plus
+        per-replica counters (the per-replica ``prefix_hit_rate`` is what
+        the affinity policy is buying)."""
+        comps = (completions if completions is not None
+                 else self._completions)
+
+        def pct(xs, q):
+            return float(np.percentile(xs, q)) if xs else 0.0
+
+        def slo(cs) -> dict:
+            ttft = [c.ttft_s for c in cs if c.ttft_s is not None]
+            lat = [c.latency_s for c in cs]
+            return {"n_requests": len(cs),
+                    "n_preempted": sum(c.n_preempted for c in cs),
+                    "n_redispatched": sum(c.n_redispatched for c in cs),
+                    "ttft_p50_s": pct(ttft, 50), "ttft_p95_s": pct(ttft, 95),
+                    "latency_p50_s": pct(lat, 50),
+                    "latency_p95_s": pct(lat, 95)}
+
+        n_new = sum(c.n_generated for c in comps)
+        stats = {
+            "n_replicas": len(self.replicas),
+            "n_failed_replicas": sum(r.failed for r in self.replicas),
+            "policy": self.policy,
+            "n_generated": int(n_new),
+            "n_prompt": int(sum(c.n_prompt for c in comps)),
+            "n_cached_tokens": int(sum(c.n_cached for c in comps)),
+            **slo(comps),
+            "by_class": {c: slo([x for x in comps if x.priority == c])
+                         for c in sorted({x.priority for x in comps})},
+            "per_replica": [
+                {"replica": r.idx, "failed": r.failed,
+                 "n_requests": r.n_done, "n_generated": r.n_tokens,
+                 "n_ticks": r.engine.n_ticks,
+                 "n_preemptions": r.engine.scheduler.n_preemptions,
+                 "prefix_hit_rate": (r.engine.prefix_cache.hit_rate
+                                     if r.engine.prefix_cache is not None
+                                     else 0.0)}
+                for r in self.replicas],
+        }
+        if wall is not None:
+            stats["wall_s"] = wall
+            stats["tok_s"] = n_new / wall if wall > 0 else 0.0
+        return stats
+
+    # -- sync convenience ---------------------------------------------------
+
+    def serve(self, requests) -> dict:
+        """Serve a batch to completion (sync wrapper): accepts the same
+        request shapes as ``ServeEngine.run`` and returns the same
+        ``{"results", "completions", "stats"}`` dict, with ``stats`` being
+        ``fleet_stats``. Must not be called from inside an event loop."""
+        return asyncio.run(self._serve(requests))
+
+    async def _serve(self, requests) -> dict:
+        reqs = []
+        for r in requests:
+            if isinstance(r, Request):
+                reqs.append(r)
+            elif isinstance(r, dict):
+                reqs.append(Request(**r))
+            else:
+                prompt, gen = r
+                reqs.append(Request(prompt=prompt, max_new_tokens=gen))
+        await self.start()
+        t0 = time.perf_counter()
+        futs = [await self.submit(r) for r in reqs]
+        completions = await asyncio.gather(*futs)
+        wall = time.perf_counter() - t0
+        await self.stop()
+        return {"results": {c.request_id: list(c.tokens)
+                            for c in completions},
+                "completions": list(completions),
+                "stats": self.fleet_stats(wall, list(completions))}

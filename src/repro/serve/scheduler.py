@@ -58,26 +58,10 @@ from typing import Callable, Optional
 
 import numpy as np
 
+from repro.serve.api import (PRIORITY_CLASSES,  # noqa: F401 (re-export)
+                             resolve_priority)
 from repro.serve.paged_kv import PageAllocator, pages_for
 from repro.serve.prefix_cache import PrefixCache
-
-# canonical class names for CLIs / request files (any int >= 0 is valid)
-PRIORITY_CLASSES = {"interactive": 0, "standard": 1, "batch": 2}
-
-
-def resolve_priority(p) -> int:
-    """'interactive' / 'standard' / 'batch' or any int >= 0."""
-    if isinstance(p, str):
-        try:
-            return PRIORITY_CLASSES[p]
-        except KeyError:
-            raise ValueError(
-                f"unknown priority class {p!r} — one of "
-                f"{sorted(PRIORITY_CLASSES)} or an int >= 0") from None
-    p = int(p)
-    if p < 0:
-        raise ValueError(f"priority must be >= 0, got {p}")
-    return p
 
 
 @dataclasses.dataclass
@@ -207,6 +191,24 @@ class Scheduler:
         self.n_prefill_chunks = 0          # chunks actually scheduled
         self.n_scheduled_tokens = 0
         self.n_preemptions = 0
+
+    # -- load (the router's least-loaded signal) ----------------------------
+
+    @property
+    def n_queued(self) -> int:
+        """Requests admitted but not finished: waiting + in a slot."""
+        return (sum(len(q) for q in self.waiting.values())
+                + sum(s is not None for s in self.slots))
+
+    @property
+    def n_active(self) -> int:
+        return sum(s is not None for s in self.slots)
+
+    @property
+    def n_reserved_pages(self) -> int:
+        """KV pages currently held by admitted requests (excludes the
+        prefix-cache tree's own references)."""
+        return sum(len(s.pages) for s in self.slots if s is not None)
 
     # -- admission ----------------------------------------------------------
 

@@ -2,8 +2,10 @@
 
 ``decode_32k`` / ``long_500k`` dry-run cells lower ``serve_step`` — one new
 token against a seq_len-deep cache — per the assignment. Greedy sampling is
-the default; the sampler is pluggable (temperature / top-k live here, not in
-the model).
+the default; the sampler is pluggable and configured by a single typed
+value: ``repro.serve.api.SamplingParams`` (temperature / top-k / top-p live
+there, not in the model). Loose ``temperature=``/``top_k=``/``top_p=``
+kwargs still work through a deprecation shim that warns once.
 
 All factories are compression-transparent: ``params`` may be a raw param
 tree or a ``repro.sparse.compress.CompressedParams``, in which case every
@@ -18,6 +20,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.models.transformer import Model
+from repro.serve.api import SamplingParams, merge_legacy_sampling
 
 
 def _top_k_mask(logits, top_k: int):
@@ -51,7 +54,8 @@ def sample_token(logits, temperature: float = 0.0, rng=None,
     (``top_k > 0``) and nucleus / top-p filtering (``top_p < 1``); both
     filters applied means top-k first, then top-p over the survivors —
     filters run on the temperature-scaled logits. jit-safe for static
-    ``top_k`` / ``top_p`` (close over them via ``make_sampler``).
+    ``top_k`` / ``top_p``. This is the scalar-level kernel; close over a
+    ``SamplingParams`` via ``make_sampler`` instead of threading scalars.
     """
     if temperature <= 0.0 or rng is None:
         return jnp.argmax(logits, axis=-1).astype(jnp.int32)
@@ -63,14 +67,30 @@ def sample_token(logits, temperature: float = 0.0, rng=None,
     return jax.random.categorical(rng, scaled, axis=-1).astype(jnp.int32)
 
 
-def make_sampler(temperature: float = 0.0, top_k: int = 0,
-                 top_p: float = 1.0) -> Callable:
+def _as_sampling(sampling, where: str, temperature, top_k,
+                 top_p) -> SamplingParams:
+    """Accept the typed value, or legacy loose scalars (warning once).
+    A bare float in the ``sampling`` slot is the historical positional
+    ``temperature`` — folded through the same shim."""
+    if sampling is not None and not isinstance(sampling, SamplingParams):
+        temperature = sampling          # legacy positional temperature
+        sampling = None
+    return merge_legacy_sampling(sampling, where, temperature, top_k, top_p)
+
+
+def make_sampler(sampling: Optional[SamplingParams] = None,
+                 top_k: Optional[int] = None, top_p: Optional[float] = None,
+                 *, temperature: Optional[float] = None) -> Callable:
     """Pluggable sampler factory for the serving engine: returns
-    ``sampler(logits, rng) -> (B,) int32`` with the sampling knobs closed
-    over (so the returned callable is shape-only and jit-stable)."""
+    ``sampler(logits, rng) -> (B,) int32`` with a ``SamplingParams`` closed
+    over (so the returned callable is shape-only and jit-stable). Legacy
+    ``make_sampler(temperature, top_k, top_p)`` still works (warns once)."""
+    sp = _as_sampling(sampling, "serve.step.make_sampler", temperature,
+                      top_k, top_p)
+
     def sampler(logits, rng=None):
-        return sample_token(logits, temperature, rng, top_k=top_k,
-                            top_p=top_p)
+        return sample_token(logits, sp.temperature, rng, top_k=sp.top_k,
+                            top_p=sp.top_p)
     return sampler
 
 
@@ -84,28 +104,44 @@ def make_prefill_step(model: Model) -> Callable:
     return prefill_step
 
 
-def make_decode_step(model: Model, temperature: float = 0.0,
-                     top_k: int = 0, top_p: float = 1.0) -> Callable:
+def make_decode_step(model: Model,
+                     sampling: Optional[SamplingParams] = None,
+                     top_k: Optional[int] = None,
+                     top_p: Optional[float] = None, *,
+                     temperature: Optional[float] = None) -> Callable:
+    sp = _as_sampling(sampling, "serve.step.make_decode_step", temperature,
+                      top_k, top_p)
+
     def decode_step(params, inputs, cache, pos, rng=None):
         """inputs: (B, 1) ids (or (B, 1, d) frontend embeddings)."""
         logits, cache = model.decode_step(params, inputs, cache, pos)
         logits = logits[:, 0]
-        tok = sample_token(logits, temperature, rng, top_k=top_k,
-                           top_p=top_p)
+        tok = sample_token(logits, sp.temperature, rng, top_k=sp.top_k,
+                           top_p=sp.top_p)
         return tok, logits, cache
     return decode_step
 
 
 def generate(model: Model, params, prompt, steps: int,
-             temperature: float = 0.0, rng=None,
-             top_k: int = 0, top_p: float = 1.0):
+             sampling: Optional[SamplingParams] = None, rng=None,
+             top_k: Optional[int] = None, top_p: Optional[float] = None, *,
+             temperature: Optional[float] = None):
     """Batched greedy/sampled generation: one prefill dispatch for the whole
     prompt (``model.prefill`` fills the KV cache in a single forward),
-    then the decode loop — instead of O(prompt_len) stepwise jit dispatches."""
+    then the decode loop — instead of O(prompt_len) stepwise jit dispatches.
+
+    ``sampling`` is the typed contract (``SamplingParams``; default
+    greedy); the historical ``generate(..., temperature=, top_k=, top_p=)``
+    spelling keeps working through a once-warning shim. ``rng`` stays a
+    separate argument: it is execution state (a jax PRNG key), not part of
+    the serializable request contract.
+    """
+    sp = _as_sampling(sampling, "serve.step.generate", temperature, top_k,
+                      top_p)
     b, s = prompt.shape
     cache = model.init_cache(b, s + steps)
     prefill = jax.jit(model.prefill)
-    decode = jax.jit(make_decode_step(model, temperature, top_k, top_p))
+    decode = jax.jit(make_decode_step(model, sp))
 
     def next_key():
         nonlocal rng
@@ -115,8 +151,8 @@ def generate(model: Model, params, prompt, steps: int,
         return sub
 
     logits, cache = prefill(params, prompt, cache)
-    tok = sample_token(logits, temperature, next_key(), top_k=top_k,
-                       top_p=top_p)
+    tok = sample_token(logits, sp.temperature, next_key(), top_k=sp.top_k,
+                       top_p=sp.top_p)
     out = [tok]
     for t in range(s, s + steps - 1):
         tok, logits, cache = decode(params, out[-1][:, None], cache,
