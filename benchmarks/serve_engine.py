@@ -74,7 +74,8 @@ def _engine_stats(model, params, requests, *, max_batch=8, prefill_chunk=16,
                                    page_size=page_size, max_seq_len=max_seq))
     eng.run(requests)                       # warm-up: compiles + first pass
     runs = [eng.run(requests)["stats"] for _ in range(2)]
-    return max(runs, key=lambda s: s["tok_s"])   # best-of-2: shave OS noise
+    best = max(runs, key=lambda s: s["tok_s"])   # best-of-2: shave OS noise
+    return best, eng
 
 
 def _sequential_tok_s(model, params, requests):
@@ -381,9 +382,9 @@ def run():
     for mix_name, fmt in cells:
         requests = _requests(MIXES[mix_name], model.cfg.vocab)
         p = formats[fmt]
-        s = _engine_stats(model, p, requests)
+        s, eng = _engine_stats(model, p, requests)
         seq_tok_s = _sequential_tok_s(model, p, requests)
-        rows.append(_row(f"serve_engine/{mix_name}_{fmt}", s, seq_tok_s))
+        rows.append(_row(f"serve_engine/{mix_name}_{fmt}", s, seq_tok_s, eng))
 
     # request-layer lanes: prefix caching (warm vs cold TTFT on the same
     # run) and priority preemption (per-class TTFT under slot contention)
@@ -406,28 +407,36 @@ def run():
                                         rplan, 0.75)
         rcp = compress_params(rpruned, rplan)
         requests = _requests(MIXES["decode_heavy"], rmodel.cfg.vocab)
-        s = _engine_stats(rmodel, rcp, requests)
+        s, eng = _engine_stats(rmodel, rcp, requests)
         seq_tok_s = _sequential_tok_s(rmodel, rcp, requests)
         rows.append(_row(f"serve_engine/{arch}_decode_heavy_bcsr",
-                         s, seq_tok_s))
+                         s, seq_tok_s, eng))
     return rows
 
 
-def _row(name, s, seq_tok_s):
-    return {
-        "name": name,
-        "us_per_call": 1e6 / max(s["tok_s"], 1e-9),
-        "derived": (f"engine_tok_s={s['tok_s']:.1f},"
-                    f"seq_tok_s={seq_tok_s:.1f},"
-                    f"batch_speedup={s['tok_s']/max(seq_tok_s,1e-9):.2f}x,"
-                    f"ttft_p50_ms={s['ttft_p50_s']*1e3:.1f},"
-                    f"ttft_p95_ms={s['ttft_p95_s']*1e3:.1f},"
-                    f"latency_p50_ms={s['latency_p50_s']*1e3:.1f},"
-                    f"latency_p95_ms={s['latency_p95_s']*1e3:.1f},"
-                    f"n_ticks={s['n_ticks']},"
-                    f"n_prefill_chunks={s['n_prefill_chunks']},"
-                    f"kv_pool_bytes={s['kv_page_bytes']},"
-                    f"state_pool_bytes={s['state_slot_bytes']}")}
+def _row(name, s, seq_tok_s, eng=None):
+    derived = (f"engine_tok_s={s['tok_s']:.1f},"
+               f"seq_tok_s={seq_tok_s:.1f},"
+               f"batch_speedup={s['tok_s']/max(seq_tok_s,1e-9):.2f}x,"
+               f"ttft_p50_ms={s['ttft_p50_s']*1e3:.1f},"
+               f"ttft_p95_ms={s['ttft_p95_s']*1e3:.1f},"
+               f"latency_p50_ms={s['latency_p50_s']*1e3:.1f},"
+               f"latency_p95_ms={s['latency_p95_s']*1e3:.1f},"
+               f"n_ticks={s['n_ticks']},"
+               f"n_prefill_chunks={s['n_prefill_chunks']},"
+               f"kv_pool_bytes={s['kv_page_bytes']},"
+               f"state_pool_bytes={s['state_slot_bytes']}")
+    row = {"name": name, "us_per_call": 1e6 / max(s["tok_s"], 1e-9)}
+    if eng is not None:
+        # registry-derived fields (whole engine lifetime: warm + timed
+        # runs) + the full snapshot as row evidence
+        occ = eng.metrics.get("repro_engine_page_occupancy")
+        p95 = occ.percentile(95) if occ is not None else None
+        derived += (f",page_occ_p95={-1.0 if p95 is None else p95:.1f}"
+                    f",n_preemptions={eng.scheduler.n_preemptions}")
+        row["metrics"] = eng.metrics.snapshot()
+    row["derived"] = derived
+    return row
 
 
 def main(argv=None) -> int:

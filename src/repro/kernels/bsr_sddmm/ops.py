@@ -14,6 +14,7 @@ import jax.numpy as jnp
 from repro.kernels.bsr_sddmm.bsr_sddmm import sddmm_block_grad
 from repro.kernels.bsr_sddmm import ref as ref_lib
 from repro.kernels import use_interpret
+from repro.obs.profile import kernel_call
 from repro.sparse.formats import BlockCSR, PaletteBCSR
 
 
@@ -52,12 +53,8 @@ def slot_coordinates(w: BlockCSR):
 
 
 @functools.partial(jax.jit, static_argnames=("bm", "interpret"))
-def bsr_weight_grad(x, dy, w: BlockCSR, *, bm: int = 128,
-                    interpret: bool | None = None):
-    """x: (M, K) activations; dy: (M, N) output cotangent; w: (N, K) BCSR.
-
-    Returns (n_slots, br, bc) f32 gradient blocks for w.data."""
-    _reject_palette(w)
+def _bsr_weight_grad(x, dy, w: BlockCSR, *, bm: int = 128,
+                     interpret: bool | None = None):
     interpret = use_interpret() if interpret is None else interpret
     br, bc = w.block
     m = x.shape[0]
@@ -77,6 +74,16 @@ def bsr_weight_grad(x, dy, w: BlockCSR, *, bm: int = 128,
                            bm=bm, interpret=interpret)
     # pad slots (slot 0 + pad_bcsr padding) carry no gradient
     return out * valid[:, None, None].astype(out.dtype)
+
+
+def bsr_weight_grad(x, dy, w: BlockCSR, *, bm: int = 128,
+                    interpret: bool | None = None):
+    """x: (M, K) activations; dy: (M, N) output cotangent; w: (N, K) BCSR.
+
+    Returns (n_slots, br, bc) f32 gradient blocks for w.data."""
+    _reject_palette(w)
+    return kernel_call("bsr_sddmm/bsr_weight_grad", _bsr_weight_grad, x, dy,
+                       w, bm=bm, interpret=interpret)
 
 
 def bsr_weight_grad_ref(x, dy, w: BlockCSR):

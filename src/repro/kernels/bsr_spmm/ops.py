@@ -17,6 +17,7 @@ from repro.kernels.bsr_spmm.bsr_spmm import (gather_block_matmul,
                                              gather_block_matmul_palette)
 from repro.kernels.bsr_spmm import ref as ref_lib
 from repro.kernels import use_interpret
+from repro.obs.profile import kernel_call
 from repro.sparse.formats import BlockCSR, PaletteBCSR
 
 
@@ -29,8 +30,7 @@ def _pad_rows(x, bm):
 
 
 @functools.partial(jax.jit, static_argnames=("bm", "interpret"))
-def spmm(x, w: BlockCSR, *, bm: int = 128, interpret: bool | None = None):
-    """Y (M, N) = X (M, K) @ W' for W (N, K) BlockCSR."""
+def _spmm(x, w: BlockCSR, *, bm: int = 128, interpret: bool | None = None):
     interpret = use_interpret() if interpret is None else interpret
     n, k = w.shape
     xp, m = _pad_rows(x, bm)
@@ -43,9 +43,14 @@ def spmm(x, w: BlockCSR, *, bm: int = 128, interpret: bool | None = None):
     return y[:m, :n]
 
 
+def spmm(x, w: BlockCSR, *, bm: int = 128, interpret: bool | None = None):
+    """Y (M, N) = X (M, K) @ W' for W (N, K) BlockCSR."""
+    return kernel_call("bsr_spmm/spmm", _spmm, x, w, bm=bm,
+                       interpret=interpret)
+
+
 @functools.partial(jax.jit, static_argnames=("bm", "interpret"))
-def spmm_t(dy, w: BlockCSR, *, bm: int = 128, interpret: bool | None = None):
-    """dX (M, K) = dY (M, N) @ W for W (N, K) BlockCSR (backward)."""
+def _spmm_t(dy, w: BlockCSR, *, bm: int = 128, interpret: bool | None = None):
     interpret = use_interpret() if interpret is None else interpret
     n, k = w.shape
     dyp, m = _pad_rows(dy, bm)
@@ -60,12 +65,15 @@ def spmm_t(dy, w: BlockCSR, *, bm: int = 128, interpret: bool | None = None):
     return dx[:m, :k]
 
 
+def spmm_t(dy, w: BlockCSR, *, bm: int = 128, interpret: bool | None = None):
+    """dX (M, K) = dY (M, N) @ W for W (N, K) BlockCSR (backward)."""
+    return kernel_call("bsr_spmm/spmm_t", _spmm_t, dy, w, bm=bm,
+                       interpret=interpret)
+
+
 @functools.partial(jax.jit, static_argnames=("bm", "interpret"))
-def spmm_palette(x, w: PaletteBCSR, *, bm: int = 128,
-                 interpret: bool | None = None):
-    """Y (M, N) = X (M, K) @ W' for W (N, K) PaletteBCSR — the quantized
-    serving forward. Dequantization (palette lookup, nibble unpack at 4-bit)
-    is fused into the gather-block-matmul kernel."""
+def _spmm_palette(x, w: PaletteBCSR, *, bm: int = 128,
+                  interpret: bool | None = None):
     interpret = use_interpret() if interpret is None else interpret
     n, k = w.shape
     xp, m = _pad_rows(x, bm)
@@ -77,6 +85,15 @@ def spmm_palette(x, w: PaletteBCSR, *, bm: int = 128,
         out_cols=w.block_grid[0] * w.block[0], transpose_block=True,
         bits=w.bits, bm=bm, interpret=interpret)
     return y[:m, :n]
+
+
+def spmm_palette(x, w: PaletteBCSR, *, bm: int = 128,
+                 interpret: bool | None = None):
+    """Y (M, N) = X (M, K) @ W' for W (N, K) PaletteBCSR — the quantized
+    serving forward. Dequantization (palette lookup, nibble unpack at 4-bit)
+    is fused into the gather-block-matmul kernel."""
+    return kernel_call("bsr_spmm/spmm_palette", _spmm_palette, x, w, bm=bm,
+                       interpret=interpret)
 
 
 @jax.custom_vjp

@@ -29,20 +29,13 @@ import jax.numpy as jnp
 from repro.kernels import use_interpret
 from repro.kernels.paged_attention import ref as ref_lib
 from repro.kernels.paged_attention.paged_attention import paged_flash_fwd
+from repro.obs.profile import kernel_call
 
 
 @functools.partial(jax.jit,
                    static_argnames=("window", "kv_splits", "interpret"))
-def paged_flash_attention(q, k_pool, v_pool, page_table, positions, *,
-                          window=None, kv_splits: int = 1, interpret=None):
-    """q: (B, C, H, hd); k/v_pool: (n_pages, ps, KV, hd);
-    page_table: (B, P) int32; positions: (B, C) int32 ABSOLUTE positions —
-    the engine contract ``positions = start_pos[:, None] + arange(C)``
-    (the kernel's page-skip predicates assume row 0 is the tick start).
-
-    Returns (B, C, H, hd) f32 attention output; invalid query rows carry
-    finite garbage exactly like the ref path.
-    """
+def _paged_flash_attention(q, k_pool, v_pool, page_table, positions, *,
+                           window=None, kv_splits: int = 1, interpret=None):
     b, c, h, hd = q.shape
     kv = k_pool.shape[2]
     g = h // kv
@@ -60,6 +53,22 @@ def paged_flash_attention(q, k_pool, v_pool, page_table, positions, *,
     acc_tot = jnp.sum(w[..., None] * acc, axis=2)
     out = acc_tot / jnp.maximum(l_tot, 1e-30)[..., None]   # (B, KV, C, g, hd)
     return out.transpose(0, 2, 1, 3, 4).reshape(b, c, h, hd)
+
+
+def paged_flash_attention(q, k_pool, v_pool, page_table, positions, *,
+                          window=None, kv_splits: int = 1, interpret=None):
+    """q: (B, C, H, hd); k/v_pool: (n_pages, ps, KV, hd);
+    page_table: (B, P) int32; positions: (B, C) int32 ABSOLUTE positions —
+    the engine contract ``positions = start_pos[:, None] + arange(C)``
+    (the kernel's page-skip predicates assume row 0 is the tick start).
+
+    Returns (B, C, H, hd) f32 attention output; invalid query rows carry
+    finite garbage exactly like the ref path.
+    """
+    return kernel_call("paged_attention/paged_flash_attention",
+                       _paged_flash_attention, q, k_pool, v_pool, page_table,
+                       positions, window=window, kv_splits=kv_splits,
+                       interpret=interpret)
 
 
 paged_attention_ref = ref_lib.paged_attention_ref

@@ -16,6 +16,7 @@ from repro.core.prox import default_regularized_predicate
 from repro.kernels.prox_adam.prox_adam import fused_prox_update
 from repro.kernels import use_interpret
 from repro.kernels.prox_adam import ref as ref_lib
+from repro.obs.profile import kernel_call
 _LANES = 128
 
 
@@ -37,8 +38,8 @@ def _from_tiles(t, n, shape, dtype):
 
 @functools.partial(jax.jit,
                    static_argnames=("rule", "apply_prox", "bm", "interpret"))
-def fused_update_leaf(w, g, m, v, scalars, *, rule="adam", apply_prox=True,
-                      bm=256, interpret=None):
+def _fused_update_leaf(w, g, m, v, scalars, *, rule="adam", apply_prox=True,
+                       bm=256, interpret=None):
     interpret = use_interpret() if interpret is None else interpret
     wt, n = _to_tiles(w, bm)
     gt, _ = _to_tiles(g.astype(jnp.float32), bm)
@@ -50,6 +51,13 @@ def fused_update_leaf(w, g, m, v, scalars, *, rule="adam", apply_prox=True,
     return (_from_tiles(wo, n, w.shape, w.dtype),
             _from_tiles(mo, n, m.shape, jnp.float32),
             _from_tiles(vo, n, v.shape, jnp.float32))
+
+
+def fused_update_leaf(w, g, m, v, scalars, *, rule="adam", apply_prox=True,
+                      bm=256, interpret=None):
+    return kernel_call("prox_adam/fused_update_leaf", _fused_update_leaf,
+                       w, g, m, v, scalars, rule=rule, apply_prox=apply_prox,
+                       bm=bm, interpret=interpret)
 
 
 def make_scalars(lr, lam, b1, b2, eps, t):

@@ -172,6 +172,25 @@ def main(argv=None):
                          "(serve/router.py). Replicas share the same "
                          "immutable (compressed) params — the smaller the "
                          "model, the more replicas fit per host")
+    ap.add_argument("--metrics-out", default="",
+                    help="with --engine: write the live metrics registry "
+                         "after the run — Prometheus text exposition, or a "
+                         "JSON snapshot when the path ends in .json "
+                         "(scheduler admissions/preemptions, page occupancy, "
+                         "prefix-cache hits, per-tick widths, router "
+                         "dispatch/failover)")
+    ap.add_argument("--trace-out", default="",
+                    help="with --engine: write a Chrome trace-event / "
+                         "Perfetto JSON of the run (per-request lifecycle "
+                         "spans + per-tick engine spans) — load it at "
+                         "https://ui.perfetto.dev")
+    ap.add_argument("--profile", nargs="?", const="", default=None,
+                    metavar="JAX_TRACE_DIR",
+                    help="with --engine: time the jitted tick and every "
+                         "Pallas kernel entry point "
+                         "(block_until_ready-bracketed wall clock) and "
+                         "print the summary; pass a directory to also "
+                         "capture a jax.profiler trace there")
     ap.add_argument("--route", default="prefix",
                     choices=["prefix", "least-loaded", "round-robin"],
                     help="router dispatch policy: 'prefix' = "
@@ -324,14 +343,47 @@ def _engine_config(args, max_seq: int):
                         sampling=_sampling(args))
 
 
+def _ms(x) -> str:
+    """Milliseconds for printing — percentiles over an empty record set
+    are None (obs.metrics.pct), shown as '-'."""
+    return "-" if x is None else f"{x * 1e3:.0f}"
+
+
 def _print_slo_classes(s):
     if len(s["by_class"]) > 1 or s.get("n_preemptions"):
         for c, cs in s["by_class"].items():
             print(f"  class {c}: {cs['n_requests']} requests "
                   f"({cs['n_preempted']} preempted) | ttft p50/p95 "
-                  f"{cs['ttft_p50_s']*1e3:.0f}/{cs['ttft_p95_s']*1e3:.0f}ms"
-                  f" | latency p50/p95 {cs['latency_p50_s']*1e3:.0f}/"
-                  f"{cs['latency_p95_s']*1e3:.0f}ms")
+                  f"{_ms(cs['ttft_p50_s'])}/{_ms(cs['ttft_p95_s'])}ms"
+                  f" | latency p50/p95 {_ms(cs['latency_p50_s'])}/"
+                  f"{_ms(cs['latency_p95_s'])}ms")
+
+
+def _telemetry(args):
+    """--trace-out / --profile flags to (tracer, profiler) — None when the
+    flag is off (the engine then uses its zero-overhead null paths)."""
+    from repro.obs import Profiler, Tracer
+    tracer = Tracer() if args.trace_out else None
+    profiler = (Profiler(jax_trace_dir=args.profile or None)
+                if args.profile is not None else None)
+    return tracer, profiler
+
+
+def _save_telemetry(args, save_prom, save_json, tracer, profiler):
+    """Write --metrics-out / --trace-out artifacts and print the profile
+    summary. ``save_prom(path)`` / ``save_json(path)`` are the caller's
+    exporters (engine registry, or the router's merged fleet exposition)."""
+    if args.metrics_out:
+        if args.metrics_out.endswith(".json"):
+            save_json(args.metrics_out)
+        else:
+            save_prom(args.metrics_out)
+        print(f"metrics -> {args.metrics_out}")
+    if args.trace_out and tracer is not None:
+        tracer.save(args.trace_out)
+        print(f"trace -> {args.trace_out} ({len(tracer.events)} events)")
+    if profiler is not None:
+        print(profiler.format_summary())
 
 
 def _check_parity(model, params, args, requests, results):
@@ -365,8 +417,10 @@ def _run_engine(model, params, args):
     try:
         if args.replicas > 1:
             return _run_router(model, params, args, config, requests)
+        tracer, profiler = _telemetry(args)
         engine = ServeEngine(model, params, config,
-                             rng=jax.random.PRNGKey(1))
+                             rng=jax.random.PRNGKey(1),
+                             tracer=tracer, profiler=profiler)
     except NotImplementedError as e:
         raise SystemExit(f"--engine: {e}")
     pb = engine.pool_bytes
@@ -375,16 +429,18 @@ def _run_engine(model, params, args):
           f"({engine.config.max_batch} slots)")
     from repro.serve.api import ApiValidationError
     try:
-        out = engine.run(requests)
+        with (profiler if profiler is not None
+              else contextlib.nullcontext()):
+            out = engine.run(requests)
     except ApiValidationError as e:
         raise SystemExit(f"--engine: {e}")
     s = out["stats"]
     print(f"engine: {s['n_requests']} requests "
           f"({s['n_prompt']} prompt + {s['n_generated']} new tokens) in "
           f"{s['wall_s']:.2f}s = {s['tok_s']:.1f} tok/s | "
-          f"ttft p50/p95 {s['ttft_p50_s']*1e3:.0f}/{s['ttft_p95_s']*1e3:.0f}ms"
-          f" | latency p50/p95 {s['latency_p50_s']*1e3:.0f}/"
-          f"{s['latency_p95_s']*1e3:.0f}ms | {s['n_ticks']} ticks, "
+          f"ttft p50/p95 {_ms(s['ttft_p50_s'])}/{_ms(s['ttft_p95_s'])}ms"
+          f" | latency p50/p95 {_ms(s['latency_p50_s'])}/"
+          f"{_ms(s['latency_p95_s'])}ms | {s['n_ticks']} ticks, "
           f"{s['n_prefill_chunks']} prefill chunks | pools "
           f"kv={s['kv_page_bytes']} state={s['state_slot_bytes']} bytes")
     if len(s["by_class"]) > 1 or s["n_preemptions"]:
@@ -393,6 +449,8 @@ def _run_engine(model, params, args):
     if args.prefix_cache:
         print(f"  prefix cache: hit rate {s['prefix_hit_rate']:.1%} "
               f"({s['n_cached_tokens']} prompt tokens served from cache)")
+    _save_telemetry(args, engine.metrics.save_prometheus,
+                    engine.metrics.save_json, tracer, profiler)
     print("sample:", [int(t) for t in out["results"][0][:16]])
     if args.parity_check:
         _check_parity(model, params, args, requests, out["results"])
@@ -402,18 +460,25 @@ def _run_engine(model, params, args):
 def _run_router(model, params, args, config, requests):
     """--replicas N: N identical engines (one EngineConfig, shared params)
     behind the prefix-affinity/least-loaded/round-robin router."""
+    from repro.serve.engine import ServeEngine
     from repro.serve.router import Router
 
-    router = Router.build(model, params, config, args.replicas,
-                          policy=args.route)
-    out = router.serve(requests)
+    tracer, profiler = _telemetry(args)
+    # one tracer across the fleet: router rids are globally unique, so
+    # every request still gets exactly one track
+    engines = [ServeEngine(model, params, config, tracer=tracer,
+                           profiler=profiler)
+               for _ in range(args.replicas)]
+    router = Router(engines, policy=args.route)
+    with (profiler if profiler is not None else contextlib.nullcontext()):
+        out = router.serve(requests)
     s = out["stats"]
     print(f"router[{args.replicas}x {args.route}]: {s['n_requests']} "
           f"requests ({s['n_prompt']} prompt + {s['n_generated']} new "
           f"tokens) in {s['wall_s']:.2f}s = {s['tok_s']:.1f} tok/s | "
-          f"ttft p50/p95 {s['ttft_p50_s']*1e3:.0f}/{s['ttft_p95_s']*1e3:.0f}ms"
-          f" | latency p50/p95 {s['latency_p50_s']*1e3:.0f}/"
-          f"{s['latency_p95_s']*1e3:.0f}ms | "
+          f"ttft p50/p95 {_ms(s['ttft_p50_s'])}/{_ms(s['ttft_p95_s'])}ms"
+          f" | latency p50/p95 {_ms(s['latency_p50_s'])}/"
+          f"{_ms(s['latency_p95_s'])}ms | "
           f"{s['n_redispatched']} re-dispatched, "
           f"{s['n_failed_replicas']} failed replicas")
     _print_slo_classes(s)
@@ -425,6 +490,20 @@ def _run_router(model, params, args, config, requests):
         if r["failed"]:
             line += " [FAILED]"
         print(line)
+
+    def save_json(path):
+        import json
+        with open(path, "w") as f:
+            json.dump({"router": router.metrics.snapshot(),
+                       "replicas": [r.engine.metrics.snapshot()
+                                    for r in router.replicas]}, f, indent=1)
+            f.write("\n")
+
+    def save_prom(path):
+        with open(path, "w") as f:
+            f.write(router.to_prometheus())
+
+    _save_telemetry(args, save_prom, save_json, tracer, profiler)
     print("sample:", [int(t) for t in out["results"][0][:16]])
     if args.parity_check:
         _check_parity(model, params, args, requests, out["results"])

@@ -88,6 +88,13 @@ def main(argv=None):
                          "flows through debias retraining and the "
                          "compressed checkpoint unchanged")
     ap.add_argument("--log-every", type=int, default=20)
+    ap.add_argument("--telemetry-out", default="",
+                    help="stream per-log-step training telemetry to this "
+                         "JSONL file: loss/grad-norm metrics, the group-l1 "
+                         "penalty, live per-layer block sparsity on the "
+                         "serving BCSR grid, and debias progress — one "
+                         "phase-tagged record per line, flushed as written "
+                         "(tail-able while training runs)")
     ap.add_argument("--sparse", action="store_true",
                     help="SpC-Retrain into BlockCSR: prox-SpC training with "
                          "plan-aligned block group-l1 (exact zero blocks on "
@@ -177,13 +184,19 @@ def main(argv=None):
         step = make_train_step(model, o, param_transform=param_transform)
         return jax.jit(step, donate_argnums=(0,))
 
+    telemetry = None
+    if args.telemetry_out:
+        from repro.obs import TrainTelemetry
+        telemetry = TrainTelemetry(args.telemetry_out)
+
     ctx = shd.use_mesh(mesh) if mesh is not None else _null_ctx()
     with ctx:
         if args.sparse:
             cp, hist_spc, hist_db, report = run_spc_retrain_pipeline(
                 params, make_step, opt, opt_debias, batch_fn,
                 spc_steps=args.steps, debias_steps=args.debias_steps,
-                plan=plan, checkpointer=ckpt, log_every=args.log_every)
+                plan=plan, checkpointer=ckpt, log_every=args.log_every,
+                telemetry=telemetry)
             if args.quantize_bits:
                 # Deep Compression stage 2, the LAST stage: quantize after
                 # debias so retraining saw fp block data; the checkpoint
@@ -206,18 +219,27 @@ def main(argv=None):
                     extra={"plan": dataclasses.asdict(cp.plan),
                            "arch": args.arch, "reduced": args.reduced})
                 print(f"compressed checkpoint: {path}")
+            if telemetry is not None:
+                telemetry.close()
+                print(f"telemetry: {telemetry.n_records} records -> "
+                      f"{args.telemetry_out}")
             return cp, hist_spc, hist_db, report
 
         state, hist_spc, hist_db, report = run_spc_pipeline(
             params, make_step, opt, opt_debias, batch_fn,
             spc_steps=args.steps, debias_steps=args.debias_steps,
-            checkpointer=ckpt, log_every=args.log_every)
+            checkpointer=ckpt, log_every=args.log_every,
+            telemetry=telemetry, sparsity_block=tuple(args.block))
 
     print("compression:", json.dumps(report, indent=1))
     if hist_spc:
         print(f"loss: {hist_spc[0]['loss']:.4f} -> {hist_spc[-1]['loss']:.4f}")
     table = metrics_lib.layer_compression(state.params)
     print(metrics_lib.format_table(table, "layer-wise compression:"))
+    if telemetry is not None:
+        telemetry.close()
+        print(f"telemetry: {telemetry.n_records} records -> "
+              f"{args.telemetry_out}")
     return state, hist_spc, hist_db, report
 
 

@@ -36,6 +36,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models.transformer import Model
+from repro.obs.metrics import MetricsRegistry, slo_summary
+from repro.obs.trace import NULL_TRACER
 from repro.serve import api
 from repro.serve.api import ApiValidationError, Completion, SamplingParams
 from repro.serve.paged_kv import (PageAllocator, copy_page, init_paged_cache,
@@ -161,7 +163,8 @@ class ServeEngine:
     ``serve.step.make_sampler`` (greedy when temperature == 0)."""
 
     def __init__(self, model: Model, params, config: EngineConfig,
-                 sampler: Optional[Callable] = None, rng=None):
+                 sampler: Optional[Callable] = None, rng=None, *,
+                 metrics=None, tracer=None, profiler=None):
         if model.paged_step is None:
             bad = unsupported_kinds(model)
             raise NotImplementedError(
@@ -176,11 +179,21 @@ class ServeEngine:
                  + tuple(model.cfg.remainder_pattern))
         self.has_attn = "attn" in kinds
         self.has_state = any(k in ("rglru", "rwkv") for k in kinds)
+        # telemetry: one registry shared by the allocator, prefix cache,
+        # scheduler, and the engine's own tick instruments — the stats dict
+        # and the Prometheus exposition read the same numbers. Default is a
+        # live (cheap) registry; pass obs.NULL_REGISTRY to strip telemetry
+        # entirely (stats counters then read 0), obs.Tracer for a lifecycle
+        # trace, obs.Profiler to time the jitted step.
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+        self.tracer = tracer if tracer is not None else NULL_TRACER
+        self.profiler = profiler
         self.pools = init_paged_cache(model, config.total_pages,
                                       config.page_size,
                                       capacity=config.max_batch)
         self.pool_bytes = slot_resource_bytes(self.pools)
-        self.allocator = PageAllocator(config.total_pages)
+        self.allocator = PageAllocator(config.total_pages,
+                                       metrics=self.metrics)
         self.prefix_cache = None
         if config.prefix_cache:
             if self.has_state:
@@ -188,7 +201,8 @@ class ServeEngine:
                     f"{model.cfg.name}: --prefix-cache shares paged KV, but "
                     "recurrent (rglru/rwkv) state is not position-sliceable "
                     "— prefix caching covers attention-only models")
-            self.prefix_cache = PrefixCache(self.allocator, config.page_size)
+            self.prefix_cache = PrefixCache(self.allocator, config.page_size,
+                                            metrics=self.metrics)
         self.scheduler = Scheduler(
             capacity=config.max_batch, prefill_chunk=config.prefill_chunk,
             allocator=self.allocator, page_size=config.page_size,
@@ -197,11 +211,30 @@ class ServeEngine:
             first_chunk=config.first_chunk,
             paged=self.has_attn,
             prefix_cache=self.prefix_cache,
-            class_shares=dict(config.class_shares or ()))
+            class_shares=dict(config.class_shares or ()),
+            metrics=self.metrics, tracer=self.tracer)
+        self._m_ticks = self.metrics.counter(
+            "repro_engine_ticks_total", "engine ticks, by compiled width",
+            labelnames=("width",))
+        self._m_tick_tokens = self.metrics.histogram(
+            "repro_engine_tick_tokens",
+            "tokens scheduled per tick (token-budget utilization)")
+        self._m_sampler_batch = self.metrics.histogram(
+            "repro_engine_sampler_batch",
+            "slots consuming their sampled token per tick")
+        self._m_occupancy = self.metrics.histogram(
+            "repro_engine_page_occupancy", "allocated KV pages per tick")
+        self._m_requests = self.metrics.counter(
+            "repro_engine_requests_total", "requests submitted, by class",
+            labelnames=("request_class",))
+        self._m_finished = self.metrics.counter(
+            "repro_engine_requests_finished_total",
+            "requests finished, by class", labelnames=("request_class",))
+        self._m_gen_tokens = self.metrics.counter(
+            "repro_engine_generated_tokens_total", "tokens generated")
         sampler = sampler or make_sampler(config.sampling)
         self._rng = rng if rng is not None else jax.random.PRNGKey(0)
         self._next_rid = 0
-        self.n_ticks = 0
         self.tick_widths: set[int] = set()   # distinct compiled step shapes
 
         def _step(params, pools, tokens, page_table, start_pos, n_tokens,
@@ -223,6 +256,11 @@ class ServeEngine:
         # COW boundary-page copy for mid-page prefix-cache hits (scalar
         # src/dst: one compiled shape no matter which pages are copied)
         self._copy_page = jax.jit(copy_page, donate_argnums=(0,))
+
+    @property
+    def n_ticks(self) -> int:
+        """Total ticks run (registry-backed; all compiled widths)."""
+        return int(self._m_ticks.total())
 
     # -- request intake -----------------------------------------------------
 
@@ -289,15 +327,19 @@ class ServeEngine:
                             eos_id=request.eos_id, stream=cb,
                             priority=request.priority)
         self.scheduler.add(req, now=time.perf_counter())
+        self._m_requests.inc(request_class=str(req.priority))
         return rid
 
     # -- the step loop ------------------------------------------------------
 
     def step(self) -> list[dict]:
         """Run one tick; returns the requests that finished during it."""
+        tracer = self.tracer
+        tick_t0 = tracer.now_us()           # tick span opens at schedule
         plan = self.scheduler.next_tick(now=time.perf_counter())
         if plan is None:
             return []
+        tracer.complete_span("schedule", tick_t0)
         # COW copies queued by this tick's admissions land BEFORE the step
         # (prefill may overwrite the copy from the divergence point); the
         # pinned source page is released once the copy is issued — ops on
@@ -308,23 +350,43 @@ class ServeEngine:
                                          jnp.int32(dst))
             self.allocator.free([src])
         self.tick_widths.add(plan.width)
-        self._rng, sub = jax.random.split(self._rng)
-        sampled, _, self.pools = self._step(
-            self.params, self.pools, jnp.asarray(plan.tokens),
-            jnp.asarray(self.scheduler.page_table()),
-            jnp.asarray(plan.start_pos), jnp.asarray(plan.n_tokens), sub)
-        self.n_ticks += 1
-        finished = self.scheduler.complete_tick(plan, np.asarray(sampled),
-                                                now=time.perf_counter())
-        if self._zero_slots is not None:
-            # zero the recurrent state of slots vacated this tick (finish
-            # or preemption) unless a new occupant landed already — the
-            # in-step position-0 reset covers that occupant regardless
-            mask = np.zeros(self.config.max_batch, bool)
-            for i in self.scheduler.drain_freed_slots():
-                mask[i] = self.scheduler.slots[i] is None
-            if mask.any():
-                self.pools = self._zero_slots(self.pools, jnp.asarray(mask))
+        n_tok = int(plan.n_tokens.sum())
+        with tracer.span("step", width=plan.width, tokens=n_tok):
+            self._rng, sub = jax.random.split(self._rng)
+            step_args = (self.params, self.pools, jnp.asarray(plan.tokens),
+                         jnp.asarray(self.scheduler.page_table()),
+                         jnp.asarray(plan.start_pos),
+                         jnp.asarray(plan.n_tokens), sub)
+            if self.profiler is not None:
+                sampled, _, self.pools = self.profiler.call(
+                    "engine/tick_step", self._step, *step_args)
+            else:
+                sampled, _, self.pools = self._step(*step_args)
+            sampled = np.asarray(sampled)   # device sync lands in the span
+        self._m_ticks.inc(width=str(plan.width))
+        self._m_tick_tokens.observe(n_tok)
+        self._m_sampler_batch.observe(len(plan.samples))
+        if self.has_attn:
+            self._m_occupancy.observe(
+                self.allocator.n_pages - 1 - self.allocator.n_free)
+        with tracer.span("bookkeep"):
+            finished = self.scheduler.complete_tick(
+                plan, sampled, now=time.perf_counter())
+            if self._zero_slots is not None:
+                # zero the recurrent state of slots vacated this tick
+                # (finish or preemption) unless a new occupant landed
+                # already — the in-step position-0 reset covers that
+                # occupant regardless
+                mask = np.zeros(self.config.max_batch, bool)
+                for i in self.scheduler.drain_freed_slots():
+                    mask[i] = self.scheduler.slots[i] is None
+                if mask.any():
+                    self.pools = self._zero_slots(self.pools,
+                                                  jnp.asarray(mask))
+        for r in finished:
+            self._m_finished.inc(request_class=str(r["priority"]))
+            self._m_gen_tokens.inc(r["n_generated"])
+        tracer.complete_span("tick", tick_t0, width=plan.width, tokens=n_tok)
         return finished
 
     def run(self, requests=None) -> dict:
@@ -365,22 +427,17 @@ class ServeEngine:
     def _stats(self, finished: list[dict], wall: float) -> dict:
         """Throughput/latency summary of a drained run, with per-priority-
         class SLO accounting (p50/p95 TTFT + latency per class) and the
-        prefix-cache hit rate."""
+        prefix-cache hit rate. Percentiles over an empty record set are
+        ``None`` (see ``obs.metrics.pct``), never a fabricated 0.0."""
         n_new = sum(r["n_generated"] for r in finished)
 
-        def pct(xs, q):
-            return float(np.percentile(xs, q)) if xs else 0.0
-
         def slo(records) -> dict:
-            ttft = [r["t_first"] - r["t_submit"] for r in records
-                    if r["t_first"] is not None]
-            lat = [r["t_done"] - r["t_submit"] for r in records]
-            return {
-                "n_requests": len(records),
-                "n_preempted": sum(r["n_preempted"] for r in records),
-                "ttft_p50_s": pct(ttft, 50), "ttft_p95_s": pct(ttft, 95),
-                "latency_p50_s": pct(lat, 50), "latency_p95_s": pct(lat, 95),
-            }
+            return slo_summary(
+                (r["t_first"] - r["t_submit"] for r in records
+                 if r["t_first"] is not None),
+                (r["t_done"] - r["t_submit"] for r in records),
+                len(records),
+                n_preempted=sum(r["n_preempted"] for r in records))
 
         stats = {
             "n_requests": len(finished),

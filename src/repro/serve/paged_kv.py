@@ -40,6 +40,7 @@ import jax.numpy as jnp
 
 from repro.models import attention, rglru, rwkv6
 from repro.models.transformer import Model
+from repro.obs.metrics import NULL_REGISTRY
 
 # pool-subtree keys holding slot-indexed recurrent state (vs "attn" pages)
 _STATE_KEYS = ("rec", "tm", "cm")
@@ -214,7 +215,7 @@ class PageAllocator:
     page tables + radix-tree nodes + in-flight COW sources).
     """
 
-    def __init__(self, n_pages: int):
+    def __init__(self, n_pages: int, metrics=NULL_REGISTRY):
         if n_pages < 2:
             raise ValueError(f"need >= 2 pages (page 0 is reserved), "
                              f"got {n_pages}")
@@ -222,10 +223,25 @@ class PageAllocator:
         # descending so .pop() hands out the lowest id first
         self._free = list(range(self.n_pages - 1, 0, -1))
         self._rc: dict[int, int] = {}      # page -> refcount (allocated only)
+        # occupancy + free-list churn instruments (obs/metrics.py)
+        self._m_in_use = metrics.gauge(
+            "repro_pages_in_use", "KV pages currently allocated")
+        self._m_free = metrics.gauge(
+            "repro_pages_free", "KV pages on the free list")
+        self._m_allocs = metrics.counter(
+            "repro_page_allocs_total", "pages handed out by alloc()")
+        self._m_frees = metrics.counter(
+            "repro_page_frees_total", "pages returned to the free list")
+        self._m_free.set(len(self._free))
+        self._m_in_use.set(0)
 
     @property
     def n_free(self) -> int:
         return len(self._free)
+
+    def _sync_gauges(self) -> None:
+        self._m_free.set(len(self._free))
+        self._m_in_use.set(self.n_pages - 1 - len(self._free))
 
     def refcount(self, page: int) -> int:
         return self._rc.get(int(page), 0)
@@ -236,6 +252,9 @@ class PageAllocator:
         pages = [self._free.pop() for _ in range(n)]
         for p in pages:
             self._rc[p] = 1
+        if pages:
+            self._m_allocs.inc(len(pages))
+            self._sync_gauges()
         return pages
 
     def incref(self, page: int) -> None:
@@ -247,6 +266,7 @@ class PageAllocator:
         """Drop one reference per page; last owner returns it to the free
         list. Freeing an unallocated (or trash) page is a hard error — the
         double-free invariant the stress suite leans on."""
+        returned = 0
         for p in pages:
             p = int(p)
             assert 0 < p < self.n_pages, p
@@ -255,7 +275,11 @@ class PageAllocator:
             if rc == 1:
                 del self._rc[p]
                 self._free.append(p)
+                returned += 1
             else:
                 self._rc[p] = rc - 1
+        if returned:
+            self._m_frees.inc(returned)
+            self._sync_gauges()
 
     decref = free

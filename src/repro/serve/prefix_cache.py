@@ -43,6 +43,7 @@ from typing import Optional
 
 import numpy as np
 
+from repro.obs.metrics import MetricsRegistry
 from repro.serve.paged_kv import PageAllocator
 
 
@@ -60,17 +61,58 @@ class _Node:
 
 
 class PrefixCache:
-    def __init__(self, allocator: PageAllocator, page_size: int):
+    def __init__(self, allocator: PageAllocator, page_size: int,
+                 metrics=None):
         self.allocator = allocator
         self.page_size = int(page_size)
         self.root = _Node(b"", 0, None)     # owns no page (trash page id 0)
         self._clock = 0
-        self.n_queries = 0
-        self.n_hit_queries = 0              # queries with >= 1 cached token
-        self.tokens_queried = 0
-        self.tokens_hit = 0
+        # hit/eviction/COW accounting lives in the metrics registry (the
+        # stats dict and the Prometheus exposition read the same numbers);
+        # standalone caches get a private live registry so counters work
+        m = metrics if metrics is not None else MetricsRegistry()
+        self._m_queries = m.counter(
+            "repro_prefix_queries_total", "prefix-cache match() calls")
+        self._m_hit_queries = m.counter(
+            "repro_prefix_hit_queries_total",
+            "match() calls returning >= 1 cached token")
+        self._m_tok_queried = m.counter(
+            "repro_prefix_tokens_queried_total", "prompt tokens matched")
+        self._m_tok_hit = m.counter(
+            "repro_prefix_tokens_hit_total",
+            "prompt tokens served from the cache")
+        self._m_inserts = m.counter(
+            "repro_prefix_inserted_pages_total", "pages newly cached")
+        self._m_evictions = m.counter(
+            "repro_prefix_evictions_total", "cached pages evicted (LRU)")
+        self._m_cow = m.counter(
+            "repro_prefix_cow_hits_total",
+            "matches ending mid-page (copy-on-write source handed out)")
+        self._m_cached_pages = m.gauge(
+            "repro_prefix_cached_pages", "pages held by the radix tree")
 
     # -- bookkeeping --------------------------------------------------------
+
+    # registry-backed spellings of the original counter attributes
+    @property
+    def n_queries(self) -> int:
+        return int(self._m_queries.value())
+
+    @property
+    def n_hit_queries(self) -> int:
+        return int(self._m_hit_queries.value())
+
+    @property
+    def tokens_queried(self) -> int:
+        return int(self._m_tok_queried.value())
+
+    @property
+    def tokens_hit(self) -> int:
+        return int(self._m_tok_hit.value())
+
+    @property
+    def n_evicted(self) -> int:
+        return int(self._m_evictions.value())
 
     @property
     def n_cached_pages(self) -> int:
@@ -119,8 +161,8 @@ class PrefixCache:
         prompt = np.asarray(prompt, np.int32)
         ps = self.page_size
         limit = len(prompt) - 1             # last token always runs
-        self.n_queries += 1
-        self.tokens_queried += len(prompt)
+        self._m_queries.inc()
+        self._m_tok_queried.inc(len(prompt))
 
         pages: list[int] = []
         node = self.root
@@ -149,10 +191,12 @@ class PrefixCache:
             self._touch(cow_src)
             self.allocator.incref(cow_src.page)
             cow_src = cow_src.page
+            self._m_cow.inc()
 
         n_cached = pos + best
-        self.tokens_hit += n_cached
-        self.n_hit_queries += n_cached > 0
+        self._m_tok_hit.inc(n_cached)
+        if n_cached > 0:
+            self._m_hit_queries.inc()
         return pages, n_cached, cow_src
 
     def insert(self, prompt: np.ndarray, pages: list) -> int:
@@ -177,6 +221,9 @@ class PrefixCache:
                 added += 1
             self._touch(child)
             node = child
+        if added:
+            self._m_inserts.inc(added)
+            self._m_cached_pages.add(added)
         return added
 
     def evict(self, n: int) -> int:
@@ -203,4 +250,7 @@ class PrefixCache:
             del best.parent.children[best.key]
             self.allocator.free([best.page])
             freed += 1
+        if freed:
+            self._m_evictions.inc(freed)
+            self._m_cached_pages.add(-freed)
         return freed

@@ -54,6 +54,7 @@ from typing import Callable, Optional
 
 import numpy as np
 
+from repro.obs.metrics import MetricsRegistry, slo_summary
 from repro.serve import api
 from repro.serve.api import ApiValidationError, Completion, Request, StreamEvent
 from repro.serve.engine import EngineConfig, ServeEngine
@@ -70,7 +71,7 @@ class ReplicaFailed(RuntimeError):
 class _Replica:
     """One worker thread + its engine + the router's view of its load."""
 
-    def __init__(self, idx: int, engine: ServeEngine):
+    def __init__(self, idx: int, engine: ServeEngine, m_done, m_tokens):
         self.idx = idx
         self.engine = engine
         self.inbox: queue.Queue = queue.Queue()
@@ -79,8 +80,10 @@ class _Replica:
         self.error: Optional[BaseException] = None
         self.failed = False               # set by the router (loop thread)
         self.inflight = 0                 # router-side dispatched - finished
-        self.n_done = 0
-        self.n_tokens = 0
+        # replica-labeled series in the router's registry — the original
+        # per-replica int counters, readable as the same attribute names
+        self._m_done = m_done
+        self._m_tokens = m_tokens
         self._post: Optional[Callable] = None   # set by Router.start
         self._epochs: dict[int, int] = {}       # rid -> dispatch epoch
 
@@ -122,6 +125,14 @@ class _Replica:
     # are heuristics, and the GIL keeps each read itself consistent) --------
 
     @property
+    def n_done(self) -> int:
+        return int(self._m_done.value(replica=str(self.idx)))
+
+    @property
+    def n_tokens(self) -> int:
+        return int(self._m_tokens.value(replica=str(self.idx)))
+
+    @property
     def load(self) -> float:
         sched = self.engine.scheduler
         return self.inflight + (sched.n_reserved_pages
@@ -160,7 +171,8 @@ class Router:
     def __init__(self, engines: list[ServeEngine], *,
                  policy: str = "prefix", affinity_pages: int = 4,
                  max_inflight: Optional[int] = None,
-                 stall_timeout_s: float = 30.0):
+                 stall_timeout_s: float = 30.0,
+                 metrics=None):
         if not engines:
             raise ApiValidationError("router needs at least one replica")
         if policy not in ROUTE_POLICIES:
@@ -170,7 +182,32 @@ class Router:
         self.policy = policy
         self.affinity_pages = int(affinity_pages)
         self.stall_timeout_s = float(stall_timeout_s)
-        self.replicas = [_Replica(i, e) for i, e in enumerate(engines)]
+        # router-level registry (each replica's engine has its own — see
+        # ``to_prometheus`` for the merged fleet exposition)
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+        self._m_requests = self.metrics.counter(
+            "repro_router_requests_total", "requests submitted to the fleet")
+        self._m_dispatches = self.metrics.counter(
+            "repro_router_dispatches_total",
+            "dispatches to a replica inbox (re-dispatches included)",
+            labelnames=("replica",))
+        self._m_backpressure = self.metrics.counter(
+            "repro_router_backpressure_waits_total",
+            "submit/dispatch waits for replica capacity")
+        self._m_failovers = self.metrics.counter(
+            "repro_router_failovers_total", "replicas marked failed")
+        self._m_redispatches = self.metrics.counter(
+            "repro_router_redispatches_total",
+            "in-flight requests re-dispatched off a failed replica")
+        m_done = self.metrics.counter(
+            "repro_router_completions_total", "completions, by replica",
+            labelnames=("replica",))
+        m_tokens = self.metrics.counter(
+            "repro_router_streamed_tokens_total",
+            "tokens streamed to the router, by replica",
+            labelnames=("replica",))
+        self.replicas = [_Replica(i, e, m_done, m_tokens)
+                         for i, e in enumerate(engines)]
         self.max_inflight = int(max_inflight
                                 or 2 * engines[0].config.max_batch)
         self._inflight: dict[int, _Inflight] = {}
@@ -332,6 +369,7 @@ class Router:
                 raise ApiValidationError(
                     f"request_id {rid} is already in flight")
         self._next_rid = max(self._next_rid, rid) + 1
+        self._m_requests.inc()
         inf = _Inflight(rid, request, self._loop.create_future(), stream)
         self._inflight[rid] = inf
         await self._dispatch(inf)
@@ -348,6 +386,7 @@ class Router:
                 return
             if idx is not None:
                 break
+            self._m_backpressure.inc()
             self._cap_event.clear()
             await self._cap_event.wait()   # backpressure: wait for capacity
         rep = self.replicas[idx]
@@ -376,6 +415,7 @@ class Router:
                     bool(ev.done))
             except RuntimeError:
                 pass
+        self._m_dispatches.inc(replica=str(idx))
         rep.inbox.put((req, cb, epoch))
 
     # -- event handlers (loop thread only) ----------------------------------
@@ -396,7 +436,7 @@ class Router:
         index = len(inf.generated)
         inf.generated.append(token)
         rep = self.replicas[idx]
-        rep.n_tokens += 1
+        rep._m_tokens.inc(replica=str(idx))
         if inf.stream is not None:
             inf.stream(StreamEvent(request_id=rid, token=token, index=index,
                                    done=done, replica=idx))
@@ -430,7 +470,7 @@ class Router:
     def _finalize(self, inf: _Inflight, rec: Optional[dict]) -> None:
         rep = self.replicas[inf.replica]
         rep.inflight -= 1
-        rep.n_done += 1
+        rep._m_done.inc(replica=str(inf.replica))
         completion = Completion(
             request_id=inf.rid, tokens=tuple(inf.generated),
             n_prompt=len(inf.request.prompt), priority=inf.request.priority,
@@ -463,6 +503,7 @@ class Router:
         if rep.failed:
             return
         rep.failed = True
+        self._m_failovers.inc()
         rep.inbox.put(_STOP)
         victims = [inf for inf in self._inflight.values()
                    if inf.replica == idx]
@@ -478,6 +519,7 @@ class Router:
                 inf.n_redispatched -= 1
                 self._finalize(inf, None)
                 continue
+            self._m_redispatches.inc()
             asyncio.ensure_future(self._dispatch(inf))
         self._cap_event.set()
 
@@ -492,18 +534,12 @@ class Router:
         comps = (completions if completions is not None
                  else self._completions)
 
-        def pct(xs, q):
-            return float(np.percentile(xs, q)) if xs else 0.0
-
         def slo(cs) -> dict:
-            ttft = [c.ttft_s for c in cs if c.ttft_s is not None]
-            lat = [c.latency_s for c in cs]
-            return {"n_requests": len(cs),
-                    "n_preempted": sum(c.n_preempted for c in cs),
-                    "n_redispatched": sum(c.n_redispatched for c in cs),
-                    "ttft_p50_s": pct(ttft, 50), "ttft_p95_s": pct(ttft, 95),
-                    "latency_p50_s": pct(lat, 50),
-                    "latency_p95_s": pct(lat, 95)}
+            return slo_summary(
+                (c.ttft_s for c in cs if c.ttft_s is not None),
+                (c.latency_s for c in cs), len(cs),
+                n_preempted=sum(c.n_preempted for c in cs),
+                n_redispatched=sum(c.n_redispatched for c in cs))
 
         n_new = sum(c.n_generated for c in comps)
         stats = {
@@ -530,6 +566,15 @@ class Router:
             stats["wall_s"] = wall
             stats["tok_s"] = n_new / wall if wall > 0 else 0.0
         return stats
+
+    def to_prometheus(self) -> str:
+        """One exposition page for the whole fleet: the router's own
+        registry plus every replica engine's registry, the latter tagged
+        with a ``replica`` label."""
+        parts = [self.metrics.to_prometheus()]
+        parts += [r.engine.metrics.to_prometheus({"replica": r.idx})
+                  for r in self.replicas]
+        return "".join(parts)
 
     # -- sync convenience ---------------------------------------------------
 

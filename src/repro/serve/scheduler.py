@@ -58,6 +58,8 @@ from typing import Callable, Optional
 
 import numpy as np
 
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.trace import NULL_TRACER
 from repro.serve.api import (PRIORITY_CLASSES,  # noqa: F401 (re-export)
                              resolve_priority)
 from repro.serve.paged_kv import PageAllocator, pages_for
@@ -147,7 +149,8 @@ class Scheduler:
                  first_chunk: Optional[int] = None,
                  paged: bool = True,
                  prefix_cache: Optional[PrefixCache] = None,
-                 class_shares: Optional[dict] = None):
+                 class_shares: Optional[dict] = None,
+                 metrics=None, tracer=None):
         if prefill_chunk < 1:
             raise ValueError(f"prefill_chunk must be >= 1, {prefill_chunk}")
         self.capacity = int(capacity)
@@ -188,9 +191,44 @@ class Scheduler:
         self._admit_clock = 0
         self._pending_copies: list[tuple[int, int]] = []   # (src, dst)
         self._freed_slots: set[int] = set()    # vacated by preempt/finish
-        self.n_prefill_chunks = 0          # chunks actually scheduled
-        self.n_scheduled_tokens = 0
-        self.n_preemptions = 0
+        # scheduling counters live in the metrics registry — the engine
+        # passes its own so stats / Prometheus read the same numbers; a
+        # standalone scheduler gets a private live registry
+        m = metrics if metrics is not None else MetricsRegistry()
+        self.tracer = tracer if tracer is not None else NULL_TRACER
+        self._m_admissions = m.counter(
+            "repro_sched_admissions_total",
+            "requests admitted into a slot (resumed = after a preemption)",
+            labelnames=("resumed",))
+        self._m_preemptions = m.counter(
+            "repro_sched_preemptions_total",
+            "requests preempted and requeued")
+        self._m_famine = m.counter(
+            "repro_sched_famine_ticks_total",
+            "empty ticks emitted under total page famine")
+        self._m_prefill_chunks = m.counter(
+            "repro_sched_prefill_chunks_total", "prefill chunks scheduled")
+        self._m_tokens = m.counter(
+            "repro_sched_tokens_total",
+            "tokens scheduled into ticks, by kind (prefill/decode)",
+            labelnames=("kind",))
+        self._m_cow = m.counter(
+            "repro_sched_cow_copies_total",
+            "copy-on-write page copies queued at admission")
+
+    # -- counters (registry-backed; kept as the original attribute names) ---
+
+    @property
+    def n_prefill_chunks(self) -> int:
+        return int(self._m_prefill_chunks.value())
+
+    @property
+    def n_scheduled_tokens(self) -> int:
+        return int(self._m_tokens.total())
+
+    @property
+    def n_preemptions(self) -> int:
+        return int(self._m_preemptions.value())
 
     # -- load (the router's least-loaded signal) ----------------------------
 
@@ -229,6 +267,7 @@ class Scheduler:
                     f"{self.allocator.n_pages - 1} total")
         self.waiting.setdefault(req.priority, deque()).append(
             _WaitEntry(req=req, t_submit=now))
+        self.tracer.request_submit(req.rid, req.priority, len(req.prompt))
 
     def _waiting_classes(self) -> list[int]:
         return sorted(c for c, q in self.waiting.items() if q)
@@ -249,6 +288,7 @@ class Scheduler:
                 if dst:
                     pages += dst
                     self._pending_copies.append((cow_src, dst[0]))
+                    self._m_cow.inc()
                 else:                      # no page for the copy: round the
                     n_cached = len(pages) * self.page_size   # match down
                     self.allocator.free([cow_src])
@@ -260,6 +300,9 @@ class Scheduler:
             n_gen_at_admit=len(entry.generated),
             n_preempted=entry.n_preempted, t_submit=entry.t_submit,
             t_admit=now, t_first=entry.t_first)
+        resumed = entry.n_preempted > 0
+        self._m_admissions.inc(resumed=str(resumed).lower())
+        self.tracer.request_admit(entry.req.rid, resumed, n_cached)
 
     def _admit(self, now: float) -> None:
         for i in range(self.capacity):
@@ -291,7 +334,8 @@ class Scheduler:
         self.allocator.free(s.pages)
         self.slots[i] = None
         self._freed_slots.add(i)
-        self.n_preemptions += 1
+        self._m_preemptions.inc()
+        self.tracer.request_preempt(s.req.rid)
         self.waiting.setdefault(s.req.priority, deque()).appendleft(
             _WaitEntry(req=s.req, t_submit=s.t_submit,
                        generated=list(s.generated),
@@ -432,6 +476,8 @@ class Scheduler:
             # pathological page famine: every slot deferred. Emit an empty
             # 1-wide plan so the engine loop keeps ticking (admission /
             # eviction may unblock the next tick).
+            self._m_famine.inc()
+            self.tracer.instant("famine_tick", cat="engine")
             return TickPlan(width=1,
                             tokens=np.zeros((self.capacity, 1), np.int32),
                             start_pos=np.zeros(self.capacity, np.int32),
@@ -450,10 +496,15 @@ class Scheduler:
             tokens[i, :c] = s.seq[s.n_prefilled:s.n_prefilled + c]
             start[i] = s.n_prefilled
             n_tok[i] = c
-            self.n_prefill_chunks += 1
+            self._m_prefill_chunks.inc()
+            self.tracer.request_prefill_chunk(s.req.rid, c)
             if s.n_prefilled + c >= len(s.seq):
                 samples.append(i)           # prompt completes: sample now
-        self.n_scheduled_tokens += int(n_tok.sum())
+        if decodes:
+            self._m_tokens.inc(len(decodes), kind="decode")
+        n_prefill_tok = int(n_tok.sum()) - len(decodes)
+        if n_prefill_tok:
+            self._m_tokens.inc(n_prefill_tok, kind="prefill")
         return TickPlan(width=width, tokens=tokens, start_pos=start,
                         n_tokens=n_tok, samples=samples)
 
@@ -482,7 +533,9 @@ class Scheduler:
             tok = int(sampled[i])
             if s.t_first is None:
                 s.t_first = now
+                self.tracer.request_first_token(s.req.rid)
             s.generated.append(tok)
+            self.tracer.request_decode(s.req.rid)
             done = (len(s.generated) >= s.req.max_new_tokens
                     or (s.req.eos_id is not None and tok == s.req.eos_id))
             if s.req.stream is not None:
@@ -496,6 +549,7 @@ class Scheduler:
         self.allocator.free(s.pages)
         self.slots[i] = None
         self._freed_slots.add(i)
+        self.tracer.request_finish(s.req.rid)
         return {
             "rid": s.req.rid,
             "slot": i,                      # for engine-side state recycling

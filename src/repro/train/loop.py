@@ -85,8 +85,15 @@ def train_loop(train_step: Callable,
                batch_fn: Callable[[int], dict],
                loop_cfg: LoopConfig,
                checkpointer: Optional[Checkpointer] = None,
-               metrics_cb: Optional[Callable[[int, dict], None]] = None):
-    """Run (and resume) one training phase. Returns (state, history)."""
+               metrics_cb: Optional[Callable[[int, dict], None]] = None,
+               telemetry=None, phase: str = "train",
+               extra_fn: Optional[Callable] = None):
+    """Run (and resume) one training phase. Returns (state, history).
+
+    ``telemetry`` (an ``obs.TrainTelemetry``) gets one phase-tagged JSONL
+    record per log step; ``extra_fn(params) -> dict`` augments it with
+    host-side measurements (e.g. ``obs.sparsity_telemetry_fn`` — live
+    block sparsity + group-l1 penalty on the serving grid)."""
     start = int(state.step)
     if checkpointer is not None:
         latest = checkpointer.latest_step()
@@ -108,6 +115,11 @@ def train_loop(train_step: Callable,
             history.append(metrics)
             if metrics_cb:
                 metrics_cb(step, metrics)
+            if telemetry is not None:
+                rec = {"phase": phase, **metrics}
+                if extra_fn is not None:
+                    rec.update(extra_fn(state.params))
+                telemetry.emit(rec)
         watchdog.record(step, time.perf_counter() - t0)
 
         if checkpointer is not None and (step + 1) % loop_cfg.ckpt_every == 0:
@@ -126,14 +138,26 @@ def run_spc_pipeline(params,
                      spc_steps: int,
                      debias_steps: int = 0,
                      checkpointer: Optional[Checkpointer] = None,
-                     log_every: int = 50):
+                     log_every: int = 50,
+                     telemetry=None,
+                     sparsity_block: Optional[tuple] = None):
     """The paper's full pipeline (§2): SpC training, then debias retraining
     with the zero mask frozen and regularization off. Returns
-    (final_state, spc_history, debias_history, compression_report)."""
+    (final_state, spc_history, debias_history, compression_report).
+
+    ``telemetry``/``sparsity_block``: stream phase-tagged JSONL records
+    (loss, grad norm, and — during SpC, when a block grid is given — live
+    block sparsity + group-l1 penalty) via ``obs.TrainTelemetry``."""
+    extra_fn = None
+    if telemetry is not None and sparsity_block is not None:
+        from repro.obs.profile import sparsity_telemetry_fn
+        extra_fn = sparsity_telemetry_fn(tuple(sparsity_block))
     step_spc = make_train_step(opt_spc)
     state = TrainState.create(params, opt_spc)
     cfg = LoopConfig(total_steps=spc_steps, log_every=log_every)
-    state, hist_spc = train_loop(step_spc, state, batch_fn, cfg, checkpointer)
+    state, hist_spc = train_loop(step_spc, state, batch_fn, cfg, checkpointer,
+                                 telemetry=telemetry, phase="spc",
+                                 extra_fn=extra_fn)
     report = {"spc": metrics_lib.total_compression(state.params)}
 
     hist_db: list[dict] = []
@@ -144,8 +168,12 @@ def run_spc_pipeline(params,
                            mask=mask, step=jnp.zeros((), jnp.int32))
         step_db = make_train_step(opt_debias)
         cfg = LoopConfig(total_steps=debias_steps, log_every=log_every)
-        state, hist_db = train_loop(step_db, state, batch_fn, cfg, None)
+        state, hist_db = train_loop(step_db, state, batch_fn, cfg, None,
+                                    telemetry=telemetry, phase="debias",
+                                    extra_fn=extra_fn)
         report["debias"] = metrics_lib.total_compression(state.params)
+    if telemetry is not None:
+        telemetry.emit({"phase": "report", **report})
     return state, hist_spc, hist_db, report
 
 
@@ -158,7 +186,8 @@ def run_spc_retrain_pipeline(params,
                              debias_steps: int,
                              plan: CompressionPlan,
                              checkpointer: Optional[Checkpointer] = None,
-                             log_every: int = 50):
+                             log_every: int = 50,
+                             telemetry=None):
     """SpC -> compress -> mask-frozen debias ON the compressed params.
 
     ``opt_spc`` should carry the plan-aligned group-l1 prox
@@ -174,10 +203,19 @@ def run_spc_retrain_pipeline(params,
     transform to ``train.step.make_train_step``. Returns
     (compressed_params, hist_spc, hist_db, report).
     """
+    extra_fn = None
+    if telemetry is not None:
+        # live sparsity on the plan's exact serving grid — the SpC
+        # trajectory records report the zero-block fraction the
+        # compression step below will actually realize
+        from repro.obs.profile import sparsity_telemetry_fn
+        extra_fn = sparsity_telemetry_fn(tuple(plan.block))
     step_spc = make_train_step(opt_spc)
     state = TrainState.create(params, opt_spc)
     cfg = LoopConfig(total_steps=spc_steps, log_every=log_every)
-    state, hist_spc = train_loop(step_spc, state, batch_fn, cfg, checkpointer)
+    state, hist_spc = train_loop(step_spc, state, batch_fn, cfg, checkpointer,
+                                 telemetry=telemetry, phase="spc",
+                                 extra_fn=extra_fn)
     report = {"spc": metrics_lib.total_compression(state.params)}
 
     cp = compress_params(state.params, plan)
@@ -193,6 +231,10 @@ def run_spc_retrain_pipeline(params,
                       for l in jax.tree.leaves(state.params))
     report["bcsr_bytes"] = compressed_size_bytes(cp)
     report["dense_bytes"] = dense_bytes
+    if telemetry is not None:
+        telemetry.emit({"phase": "compress",
+                        "bcsr_bytes": report["bcsr_bytes"],
+                        "dense_bytes": report["dense_bytes"]})
 
     hist_db: list[dict] = []
     if debias_steps:
@@ -203,6 +245,10 @@ def run_spc_retrain_pipeline(params,
                         mask=mask, step=jnp.zeros((), jnp.int32))
         step_db = make_train_step(opt_debias, param_transform=rebuild)
         cfg = LoopConfig(total_steps=debias_steps, log_every=log_every)
-        st, hist_db = train_loop(step_db, st, batch_fn, cfg, None)
+        # debias trains the compressed representation itself (BlockCSR
+        # data slots) — the dense-grid sparsity probe does not apply, the
+        # mask is frozen anyway; records carry the plain loss metrics
+        st, hist_db = train_loop(step_db, st, batch_fn, cfg, None,
+                                 telemetry=telemetry, phase="debias")
         cp = rebuild(st.params)
     return cp, hist_spc, hist_db, report

@@ -1,0 +1,536 @@
+"""Telemetry subsystem: metrics registry, request tracer, profiling hooks.
+
+The load-bearing guarantees:
+  * percentile helpers: ``pct([])`` is ``None`` — an empty completions list
+    must never crash ``np.percentile`` or fabricate a 0.0 SLO,
+  * registry: get-or-create identity, labeled series, kind/label conflicts
+    rejected, snapshot + Prometheus exposition round-trip through the
+    strict reader (``parse_prometheus``),
+  * tracer: span nesting/ordering invariants under a fake clock, a
+    preempt-requeue produces a *resumed* span chain (never overlapping
+    duplicates), Chrome schema validation (required keys, monotonic ts),
+  * engine end-to-end: Prometheus counters match scheduler / allocator /
+    prefix-cache ground truth, and per-request trace span durations
+    reconcile with the stats dict's ttft/latency percentiles (± a tick),
+  * profiler: eager kernel calls are wall-timed, traced (in-jit) calls are
+    only counted; the disabled path (no active profiler, NULL registry,
+    NULL tracer) stays no-op cheap.
+"""
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.model_zoo import build
+from repro.obs.metrics import (MetricsRegistry, NULL_REGISTRY, parse_prometheus,
+                               pct, prom_value, slo_summary)
+from repro.obs.profile import (Profiler, TrainTelemetry, kernel_call,
+                               sparsity_telemetry_fn)
+from repro.obs.trace import (ENGINE_TID, NULL_TRACER, Tracer,
+                             validate_chrome_trace)
+from repro.serve import api
+from repro.serve.engine import EngineConfig, ServeEngine
+
+GEN = 5
+
+
+@pytest.fixture(scope="module")
+def model():
+    return build("smollm-360m", reduced=True)
+
+
+@pytest.fixture(scope="module")
+def params(model):
+    return model.init(jax.random.PRNGKey(0))
+
+
+def _prompts(lens, vocab, seed=7):
+    key = jax.random.PRNGKey(seed)
+    return [np.asarray(jax.random.randint(jax.random.fold_in(key, i),
+                                          (L,), 0, vocab), np.int32)
+            for i, L in enumerate(lens)]
+
+
+# ---------------------------------------------------------------------------
+# percentile / SLO helpers
+# ---------------------------------------------------------------------------
+
+def test_pct_empty_is_none():
+    assert pct([], 50) is None
+    assert pct([], 95) is None
+    assert pct(iter([]), 50) is None
+
+
+def test_pct_values():
+    assert pct([3.0], 50) == 3.0
+    assert pct([1.0, 2.0, 3.0], 50) == 2.0
+
+
+def test_slo_summary_empty():
+    s = slo_summary([], [], 0, n_preempted=0)
+    assert s["n_requests"] == 0 and s["n_preempted"] == 0
+    assert s["ttft_p50_s"] is None and s["latency_p95_s"] is None
+
+
+def test_slo_summary_extra_keys():
+    s = slo_summary([0.1], [0.5], 1, n_redispatched=2)
+    assert s["n_redispatched"] == 2
+    assert s["ttft_p50_s"] == pytest.approx(0.1)
+    assert s["latency_p50_s"] == pytest.approx(0.5)
+
+
+# ---------------------------------------------------------------------------
+# metrics registry
+# ---------------------------------------------------------------------------
+
+def test_registry_get_or_create_identity():
+    m = MetricsRegistry()
+    c1 = m.counter("repro_x_total", "x")
+    c2 = m.counter("repro_x_total")
+    assert c1 is c2
+    c1.inc()
+    c2.inc(2)
+    assert c1.value() == 3
+
+
+def test_registry_conflicts_rejected():
+    m = MetricsRegistry()
+    m.counter("repro_x_total")
+    with pytest.raises(ValueError):
+        m.gauge("repro_x_total")
+    m.counter("repro_y_total", labelnames=("kind",))
+    with pytest.raises(ValueError):
+        m.counter("repro_y_total", labelnames=("other",))
+    with pytest.raises(ValueError):
+        m.counter("bad name!")
+
+
+def test_counter_labels_and_total():
+    m = MetricsRegistry()
+    c = m.counter("repro_tok_total", labelnames=("kind",))
+    c.inc(3, kind="prefill")
+    c.inc(2, kind="decode")
+    assert c.value(kind="prefill") == 3
+    assert c.total() == 5
+    with pytest.raises(ValueError):
+        c.inc()                               # labeled counter needs labels
+    with pytest.raises(ValueError):
+        m.counter("repro_plain_total").inc(1, kind="x")   # and vice versa
+    with pytest.raises(ValueError):
+        c.inc(-1, kind="decode")              # counters only go up
+
+
+def test_histogram_bounded_window():
+    m = MetricsRegistry()
+    h = m.histogram("repro_h", max_samples=8)
+    for i in range(100):
+        h.observe(float(i))
+    assert h.count() == 100                    # exact count survives the ring
+    assert h.sum() == sum(range(100))
+    assert len(h._series[()].samples) == 8     # bounded reservoir
+    assert h.percentile(50) >= 90              # window holds recent values
+
+
+def test_snapshot_shape():
+    m = MetricsRegistry()
+    m.counter("repro_a_total").inc(2)
+    m.gauge("repro_g").set(7)
+    m.histogram("repro_h").observe(1.5)
+    snap = m.snapshot()
+    assert snap["repro_a_total"]["type"] == "counter"
+    assert snap["repro_a_total"]["series"][0]["value"] == 2
+    assert snap["repro_g"]["series"][0]["value"] == 7
+    hs = snap["repro_h"]["series"][0]
+    assert hs["count"] == 1 and hs["p50"] == 1.5
+    json.dumps(snap)                           # JSON-safe by construction
+
+
+def test_prometheus_round_trip():
+    m = MetricsRegistry()
+    m.counter("repro_a_total", "a counter").inc(3)
+    c = m.counter("repro_b_total", labelnames=("kind",))
+    c.inc(2, kind="prefill")
+    c.inc(5, kind="decode")
+    m.gauge("repro_g", "a gauge").set(1.25)
+    h = m.histogram("repro_h")
+    for v in (1.0, 2.0, 3.0):
+        h.observe(v)
+    text = m.to_prometheus()
+    parsed = parse_prometheus(text)
+    assert prom_value(parsed, "repro_a_total") == 3
+    assert prom_value(parsed, "repro_b_total", kind="decode") == 5
+    assert prom_value(parsed, "repro_b_total") == 7      # label-free sums
+    assert prom_value(parsed, "repro_g") == 1.25
+    assert prom_value(parsed, "repro_h_count") == 3
+    assert prom_value(parsed, "repro_h_sum") == 6.0
+    assert prom_value(parsed, "repro_h", quantile="0.5") == 2.0
+    assert prom_value(parsed, "repro_missing") is None
+
+
+def test_prometheus_extra_labels():
+    m = MetricsRegistry()
+    m.counter("repro_a_total").inc(4)
+    parsed = parse_prometheus(m.to_prometheus({"replica": 1}))
+    assert prom_value(parsed, "repro_a_total", replica="1") == 4
+
+
+def test_parse_prometheus_rejects_garbage():
+    with pytest.raises(ValueError):
+        parse_prometheus("this is not { a sample\n")
+
+
+def test_null_registry_is_inert():
+    c = NULL_REGISTRY.counter("repro_x_total", labelnames=("kind",))
+    c.inc(5, kind="prefill")
+    assert c.value(kind="prefill") == 0 and c.total() == 0
+    h = NULL_REGISTRY.histogram("repro_h")
+    h.observe(1.0)
+    assert h.count() == 0 and h.percentile(50) is None
+    assert NULL_REGISTRY.snapshot() == {}
+    assert NULL_REGISTRY.to_prometheus() == ""
+
+
+# ---------------------------------------------------------------------------
+# tracer (fake clock)
+# ---------------------------------------------------------------------------
+
+def _fake_clock():
+    t = [0.0]
+
+    def clock():
+        return t[0]
+
+    def advance(ds):
+        t[0] += ds
+
+    return clock, advance
+
+
+def _spans(tr, tid=None, name=None):
+    return [e for e in tr.events if e["ph"] == "X"
+            and (tid is None or e["tid"] == tid)
+            and (name is None or e["name"] == name)]
+
+
+def test_tracer_lifecycle_spans():
+    clock, advance = _fake_clock()
+    tr = Tracer(clock=clock)
+    tr.request_submit(0, priority=1, n_prompt=8)
+    advance(0.010)
+    tr.request_admit(0, resumed=False, n_cached=0)
+    advance(0.020)
+    tr.request_first_token(0)
+    tr.request_decode(0)
+    advance(0.030)
+    tr.request_finish(0)
+
+    tid = tr._tid(0)
+    spans = _spans(tr, tid=tid)
+    assert [s["name"] for s in sorted(spans, key=lambda s: s["ts"])] == \
+        ["wait", "prefill", "decode"]
+    # exactly one phase open at a time: spans tile the timeline
+    spans.sort(key=lambda s: s["ts"])
+    for a, b in zip(spans, spans[1:]):
+        assert a["ts"] + a["dur"] == b["ts"]
+    assert spans[0]["dur"] == 10_000 and spans[1]["dur"] == 20_000
+    names = [e["name"] for e in tr.events if e["ph"] == "i"]
+    assert names == ["submit", "first_token", "done"]
+
+
+def test_tracer_preempt_resumed_chain_not_duplicate():
+    clock, advance = _fake_clock()
+    tr = Tracer(clock=clock)
+    tr.request_submit(7, priority=2, n_prompt=4)
+    advance(0.001)
+    tr.request_admit(7, resumed=False, n_cached=0)
+    advance(0.001)
+    tr.request_decode(7)
+    tr.request_decode(7)                       # per-token: idempotent
+    advance(0.001)
+    tr.request_preempt(7)
+    advance(0.005)
+    tr.request_admit(7, resumed=True, n_cached=0)
+    advance(0.001)
+    tr.request_decode(7)
+    advance(0.001)
+    tr.request_finish(7)
+
+    tid = tr._tid(7)
+    spans = sorted(_spans(tr, tid=tid), key=lambda s: s["ts"])
+    assert [s["name"] for s in spans] == \
+        ["wait", "prefill", "decode", "wait", "prefill", "decode"]
+    # resumed chain, never overlapping duplicates
+    for a, b in zip(spans, spans[1:]):
+        assert a["ts"] + a["dur"] <= b["ts"]
+    assert spans[3]["args"]["resumed"] is True
+    assert spans[4]["args"]["resumed"] is True
+    # idempotent phase(): only ONE decode span per admission
+    assert sum(s["name"] == "decode" for s in spans) == 2
+
+
+def test_tracer_engine_span_nesting():
+    clock, advance = _fake_clock()
+    tr = Tracer(clock=clock)
+    t0 = tr.now_us()
+    advance(0.002)
+    tr.complete_span("schedule", t0)
+    with tr.span("step", width=4):
+        advance(0.003)
+    tr.complete_span("tick", t0, width=4)
+    doc = tr.to_chrome()
+    validate_chrome_trace(doc)
+    body = [e for e in doc["traceEvents"] if e["ph"] != "M"]
+    # parent (longest) first at equal ts; children contained in the tick
+    assert body[0]["name"] == "tick"
+    tick = body[0]
+    for child in body[1:]:
+        assert tick["ts"] <= child["ts"]
+        assert child["ts"] + child["dur"] <= tick["ts"] + tick["dur"]
+
+
+def test_chrome_schema_and_metadata():
+    clock, advance = _fake_clock()
+    tr = Tracer(clock=clock)
+    tr.request_submit(3, priority=0, n_prompt=2)
+    advance(0.001)
+    tr.request_finish(3)
+    doc = tr.to_chrome(process_name="test-proc")
+    events = validate_chrome_trace(doc)
+    meta = [e for e in events if e["ph"] == "M"]
+    assert {m["args"]["name"] for m in meta} >= \
+        {"test-proc", "engine", "request 3"}
+    for e in events:
+        for k in ("name", "ph", "ts", "pid", "tid"):
+            assert k in e
+
+
+def test_validate_chrome_trace_rejects():
+    with pytest.raises(ValueError):
+        validate_chrome_trace({"no": "traceEvents"})
+    bad = {"traceEvents": [{"name": "a", "ph": "i", "ts": 5, "pid": 0,
+                            "tid": 0},
+                           {"name": "b", "ph": "i", "ts": 1, "pid": 0,
+                            "tid": 0}]}
+    with pytest.raises(ValueError):
+        validate_chrome_trace(bad)             # ts not monotonic
+    with pytest.raises(ValueError):
+        validate_chrome_trace({"traceEvents": [{"name": "x", "ph": "X",
+                                                "ts": 0, "pid": 0,
+                                                "tid": 0}]})  # X without dur
+
+
+def test_null_tracer_inert():
+    NULL_TRACER.request_submit(0, 0, 0)
+    NULL_TRACER.request_finish(0)
+    with NULL_TRACER.span("x"):
+        pass
+    assert NULL_TRACER.events == []
+    assert NULL_TRACER.to_chrome()["traceEvents"] == []
+
+
+# ---------------------------------------------------------------------------
+# profiler + train telemetry
+# ---------------------------------------------------------------------------
+
+def test_kernel_call_passthrough_when_inactive():
+    assert kernel_call("t/id", lambda x: x + 1, 41) == 42
+
+
+def test_profiler_times_eager_counts_traced():
+    def f(x):
+        return kernel_call("t/f", jnp.sin, x)
+
+    with Profiler() as p:
+        kernel_call("t/f", jnp.sin, jnp.ones((4,)))       # eager: timed
+        jax.jit(f)(jnp.ones((4,)))                        # traced: counted
+    r = p.summary()["t/f"]
+    assert r["n_calls"] == 1 and r["total_ms"] > 0 and r["mean_ms"] > 0
+    assert r["n_traced"] == 1
+    assert "t/f" in p.format_summary()
+    # deactivated on exit
+    assert kernel_call("t/f", lambda: 7) == 7
+    assert p.summary()["t/f"]["n_calls"] == 1
+
+
+def test_train_telemetry_jsonl(tmp_path):
+    path = str(tmp_path / "run.jsonl")
+    tel = TrainTelemetry(path)
+    tel.emit({"phase": "spc", "step": 0, "loss": np.float32(1.5)})
+    tel.emit({"phase": "debias", "step": 1, "loss": 1.0})
+    tel.close()
+    recs = [json.loads(l) for l in open(path)]
+    assert tel.n_records == 2 and len(recs) == 2
+    assert recs[0]["phase"] == "spc" and recs[0]["loss"] == 1.5
+    assert recs[1]["phase"] == "debias"
+
+
+def test_sparsity_telemetry_fn(model, params):
+    fn = sparsity_telemetry_fn((8, 64), lam=0.5)
+    rec = fn(params)
+    assert 0.0 <= rec["block_sparsity"] <= 1.0
+    assert rec["group_l1_penalty"] > 0
+    assert rec["layer_block_sparsity"]          # at least one target layer
+    for v in rec["layer_block_sparsity"].values():
+        assert 0.0 <= v <= 1.0
+
+
+# ---------------------------------------------------------------------------
+# engine end-to-end: counters vs ground truth, trace vs stats
+# ---------------------------------------------------------------------------
+
+def test_engine_counters_match_ground_truth(model, params):
+    tracer = Tracer()
+    eng = ServeEngine(model, params,
+                      EngineConfig(max_batch=4, prefill_chunk=8, page_size=4,
+                                   max_seq_len=16 + GEN),
+                      tracer=tracer)
+    prompts = _prompts([5, 12, 3, 16, 9], model.cfg.vocab)
+    out = eng.run([(p, GEN) for p in prompts])
+    stats = out["stats"]
+
+    parsed = parse_prometheus(eng.metrics.to_prometheus())
+    assert prom_value(parsed, "repro_engine_ticks_total") == eng.n_ticks
+    assert prom_value(parsed, "repro_sched_prefill_chunks_total") == \
+        eng.scheduler.n_prefill_chunks
+    assert prom_value(parsed, "repro_sched_tokens_total") == \
+        eng.scheduler.n_scheduled_tokens
+    assert prom_value(parsed, "repro_engine_requests_total") == len(prompts)
+    assert prom_value(parsed, "repro_engine_requests_finished_total") == \
+        len(prompts)
+    assert prom_value(parsed, "repro_engine_generated_tokens_total") == \
+        stats["n_generated"]
+    # every admission was fresh (no preemption in this mix)
+    assert prom_value(parsed, "repro_sched_admissions_total",
+                      resumed="false") == len(prompts)
+    # an untouched counter has no series -> absent from the exposition
+    assert prom_value(parsed, "repro_sched_preemptions_total") is None
+    assert eng.scheduler.n_preemptions == 0
+    # allocator churn balances once every request released its pages
+    allocs = prom_value(parsed, "repro_page_allocs_total")
+    frees = prom_value(parsed, "repro_page_frees_total")
+    assert allocs > 0 and allocs == frees
+    assert prom_value(parsed, "repro_pages_in_use") == 0
+    assert prom_value(parsed, "repro_pages_free") == eng.allocator.n_free
+    # tick-width counts sum over the labeled series
+    widths = {lab_d["width"]
+              for (n, lab), _ in parsed.items() if n == "repro_engine_ticks_total"
+              for lab_d in [dict(lab)]}
+    assert widths <= {"1", "8"}                # decode + prefill_chunk widths
+
+    # trace reconciles with stats: per-request done-submit vs latency p50
+    doc = tracer.to_chrome()
+    validate_chrome_trace(doc)
+    by_rid_inst = {}
+    for e in doc["traceEvents"]:
+        if e["ph"] == "i" and e.get("cat") == "request":
+            by_rid_inst.setdefault(e["args"]["rid"], {})[e["name"]] = e["ts"]
+    tick_durs = [e["dur"] for e in doc["traceEvents"]
+                 if e["ph"] == "X" and e["name"] == "tick"]
+    tol_s = (max(tick_durs) / 1e6) * 1.5 + 0.05   # ± a tick (+ sched slack)
+    lats = [(inst["done"] - inst["submit"]) / 1e6
+            for inst in by_rid_inst.values()]
+    ttfts = [(inst["first_token"] - inst["submit"]) / 1e6
+             for inst in by_rid_inst.values()]
+    assert len(lats) == len(prompts)
+    assert abs(float(np.percentile(lats, 50)) - stats["latency_p50_s"]) \
+        <= tol_s
+    assert abs(float(np.percentile(ttfts, 50)) - stats["ttft_p50_s"]) \
+        <= tol_s
+
+
+def test_engine_preemption_resumed_spans_and_counters(model, params):
+    tracer = Tracer()
+    eng = ServeEngine(model, params,
+                      EngineConfig(max_batch=2, prefill_chunk=8, page_size=4,
+                                   max_seq_len=32),
+                      tracer=tracer)
+    prompts = _prompts([6, 6, 6, 6], model.cfg.vocab)
+    finished = []
+    for i in range(3):                         # batch requests occupy slots
+        eng.submit(api.Request(prompt=prompts[i], max_new_tokens=16,
+                               priority="batch"))
+    for _ in range(4):
+        finished.extend(eng.step())
+    eng.submit(api.Request(prompt=prompts[3], max_new_tokens=4,
+                           priority="interactive"))
+    while eng.scheduler.has_work():
+        finished.extend(eng.step())
+    assert eng.scheduler.n_preemptions >= 1
+
+    parsed = parse_prometheus(eng.metrics.to_prometheus())
+    assert prom_value(parsed, "repro_sched_preemptions_total") == \
+        eng.scheduler.n_preemptions
+    resumed = prom_value(parsed, "repro_sched_admissions_total",
+                         resumed="true")
+    assert resumed is not None and resumed >= 1
+    assert prom_value(parsed, "repro_engine_requests_total",
+                      request_class="0") == 1      # the interactive arrival
+
+    # preempted request: resumed span chain, never overlapping duplicates
+    doc = tracer.to_chrome()
+    validate_chrome_trace(doc)
+    preempted_tids = {e["tid"] for e in doc["traceEvents"]
+                      if e["ph"] == "i" and e["name"] == "preempt"}
+    assert preempted_tids
+    for tid in preempted_tids:
+        spans = sorted([e for e in doc["traceEvents"]
+                        if e["ph"] == "X" and e["tid"] == tid],
+                       key=lambda e: e["ts"])
+        assert sum(s["name"] == "wait" for s in spans) >= 2
+        assert any(s["args"].get("resumed") for s in spans)
+        for a, b in zip(spans, spans[1:]):
+            assert a["ts"] + a["dur"] <= b["ts"]
+
+
+def test_engine_prefix_cache_counters(model, params):
+    eng = ServeEngine(model, params,
+                      EngineConfig(max_batch=4, prefill_chunk=8, page_size=4,
+                                   max_seq_len=32, prefix_cache=True))
+    shared = _prompts([16], model.cfg.vocab)[0]
+    tails = _prompts([4, 4], model.cfg.vocab, seed=11)
+    wave = [(np.concatenate([shared, t]), GEN) for t in tails]
+    eng.run(wave)                              # cold: populates the cache
+    eng.run(wave)                              # warm: hits
+    c = eng.prefix_cache
+    parsed = parse_prometheus(eng.metrics.to_prometheus())
+    assert prom_value(parsed, "repro_prefix_queries_total") == c.n_queries
+    assert prom_value(parsed, "repro_prefix_hit_queries_total") == \
+        c.n_hit_queries
+    assert prom_value(parsed, "repro_prefix_tokens_hit_total") == \
+        c.tokens_hit
+    assert c.tokens_hit > 0                    # the warm wave actually hit
+    assert prom_value(parsed, "repro_prefix_cached_pages") == c.n_cached_pages
+    inserted = prom_value(parsed, "repro_prefix_inserted_pages_total")
+    evicted = prom_value(parsed, "repro_prefix_evictions_total") or 0
+    assert inserted - evicted == c.n_cached_pages
+
+
+def test_engine_stats_read_from_registry(model, params):
+    """`engine._stats` counters are registry-backed — zeroing the registry
+    path (NULL) still yields a structurally complete stats dict."""
+    from repro.obs.metrics import NullRegistry
+
+    eng = ServeEngine(model, params,
+                      EngineConfig(max_batch=2, prefill_chunk=8, page_size=4,
+                                   max_seq_len=16),
+                      metrics=NullRegistry())
+    out = eng.run([(p, GEN) for p in _prompts([4, 6], model.cfg.vocab)])
+    s = out["stats"]
+    assert s["n_generated"] == 2 * GEN         # records, not registry
+    assert eng.n_ticks == 0                    # registry-backed -> inert
+    assert eng.scheduler.n_prefill_chunks == 0
+    assert eng.metrics.to_prometheus() == ""
+
+
+def test_disabled_telemetry_overhead():
+    """The no-op path must stay a constant-time method call per site."""
+    n = 200_000
+    t0 = time.perf_counter()
+    for _ in range(n):
+        NULL_TRACER.request_decode(1)
+        NULL_REGISTRY.counter("x").inc()
+    dt = time.perf_counter() - t0
+    assert dt < 2.0                            # generous: ~µs per call pair
